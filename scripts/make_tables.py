@@ -1,0 +1,42 @@
+"""Emit the EXPERIMENTS.md roofline tables from dry-run artifacts."""
+import glob
+import json
+import sys
+
+
+def load(d):
+    return sorted((json.load(open(f)) for f in glob.glob(f"{d}/*.json")),
+                  key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                 r.get("variant", "")))
+
+
+def fmt(d, mesh=None, variants=False):
+    rows = []
+    for r in load(d):
+        if mesh and r["mesh"] != mesh:
+            continue
+        if not variants and r.get("variant"):
+            continue
+        tag = f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+        if variants:
+            tag += f" | {r.get('variant') or '-'}"
+        if r["status"] == "skipped":
+            rows.append(f"{tag} | skipped | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{tag} | FAILED | — | — | — | — | — |")
+            continue
+        rf = r["roofline"]
+        peak = r.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+        rows.append(
+            f"{tag} | {rf['bottleneck']} | {rf['compute_s']*1e3:.1f} | "
+            f"{rf['memory_s']*1e3:.1f} | {rf['collective_s']*1e3:.1f} | "
+            f"{rf['useful_ratio']:.2f} | {peak:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_v2"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else None
+    variants = len(sys.argv) > 3
+    print(fmt(which, mesh or None, variants))

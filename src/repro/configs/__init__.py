@@ -1,0 +1,4 @@
+from .base import SHAPES, ModelConfig, ShapeConfig
+from .archs import ARCHS, get_config, smoke
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "ARCHS", "get_config", "smoke"]

@@ -1,0 +1,102 @@
+"""BCPNN projection: a plastic, patchily-connected weight matrix between
+two hypercolumnar populations, plus its probability traces.
+
+This is the unit of work the paper's accelerator streams: activation
+(support matmul + HC softmax) and plasticity (trace EMA + log-weight
+recompute).  Both stages have fused Pallas kernels in kernels/; the
+methods here are the pure-jnp reference path, selected by ``use_pallas``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .hypercolumns import LayerGeom, hc_softmax
+from .traces import Traces, init_traces, mutual_information, update_traces, weights_from_traces
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjSpec:
+    """Static configuration of a projection."""
+
+    pre: LayerGeom
+    post: LayerGeom
+    alpha: float = 1e-3        # trace smoothing = dt / tau_p
+    eps: float = 1e-4          # probability floor
+    gain: float = 1.0          # softmax gain on support
+    nact: Optional[int] = None  # active pre-HCs per post-HC (None = dense)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Projection:
+    """Learnable state of a projection (a pytree)."""
+
+    traces: Traces
+    w: jax.Array     # (Ni, Nj) masked log-odds weights
+    b: jax.Array     # (Nj,)    log-prior biases
+    mask: jax.Array  # (Hi, Hj) float {0,1} structural connectivity
+
+
+def _expand_mask(mask: jax.Array, spec: ProjSpec) -> jax.Array:
+    """(Hi, Hj) HC-level mask -> (Ni, Nj) unit-level mask."""
+    m = jnp.repeat(mask, spec.pre.M, axis=0)
+    return jnp.repeat(m, spec.post.M, axis=1)
+
+
+def init_projection(spec: ProjSpec, key: jax.Array) -> Projection:
+    """Uniform-prior traces + random initial receptive fields.
+
+    With nact set, each post-HC starts with a random subset of nact pre-HCs
+    active (the paper's "sparse, patchy connectivity"); structural
+    plasticity later rewires this mask toward high-MI inputs (Fig. 5).
+    """
+    k_tr, key = jax.random.split(key)
+    tr = init_traces(spec.pre.N, spec.post.N, spec.pre.M, spec.post.M, key=k_tr)
+    if spec.nact is None or spec.nact >= spec.pre.H:
+        mask = jnp.ones((spec.pre.H, spec.post.H), jnp.float32)
+    else:
+        scores = jax.random.uniform(key, (spec.pre.H, spec.post.H))
+        thresh = -jnp.sort(-scores, axis=0)[spec.nact - 1]  # per-post cutoff
+        mask = (scores >= thresh).astype(jnp.float32)
+    w, b = weights_from_traces(tr, spec.eps)
+    w = w * _expand_mask(mask, spec)
+    return Projection(traces=tr, w=w, b=b, mask=mask)
+
+
+def forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
+    """Activation stage: rates -> post-synaptic rates.   x: (B, Ni)."""
+    support = proj.b[None, :] + x @ proj.w
+    return hc_softmax(support, spec.post, spec.gain)
+
+
+def support(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
+    """Log-domain support only (used by readout/inference paths)."""
+    return proj.b[None, :] + x @ proj.w
+
+
+def learn(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Projection:
+    """Plasticity stage: one streaming batch update of traces + weights."""
+    tr = update_traces(proj.traces, x, y, spec.alpha)
+    w, b = weights_from_traces(tr, spec.eps)
+    w = w * _expand_mask(proj.mask, spec)
+    return Projection(traces=tr, w=w, b=b, mask=proj.mask)
+
+
+def rewire(proj: Projection, spec: ProjSpec) -> Projection:
+    """Structural plasticity: keep the top-nact highest-MI pre-HCs per
+    post-HC.  Fully on-device (beyond-paper: the paper did this on the host
+    and paid a measured total-time penalty on small datasets)."""
+    if spec.nact is None or spec.nact >= spec.pre.H:
+        return proj
+    mi = mutual_information(
+        proj.traces, spec.pre.H, spec.pre.M, spec.post.H, spec.post.M, spec.eps
+    )  # (Hi, Hj)
+    thresh = -jnp.sort(-mi, axis=0)[spec.nact - 1]
+    mask = (mi >= thresh).astype(jnp.float32)
+    w, b = weights_from_traces(proj.traces, spec.eps)
+    w = w * _expand_mask(mask, spec)
+    return Projection(traces=proj.traces, w=w, b=b, mask=mask)

@@ -1,0 +1,79 @@
+"""BCPNNHead — the paper's technique as a first-class framework feature.
+
+Attaches a BCPNN classifier to ANY architecture in the zoo: pooled hidden
+states from a (frozen or training) LM trunk are rate-encoded into input
+hypercolumns and fed to a full BCPNN network for online unsupervised /
+semi-supervised readout.  This is the integration point that makes BCPNN
+applicable across all 10 assigned architectures (DESIGN.md §4) — the trunk
+trains with gradients; the head learns with the local Hebbian-Bayesian
+rule, online, with no backprop through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hypercolumns import encode_scalar_hcs
+from .network import BCPNNConfig, BCPNNState, infer, init_network, supervised_step, unsupervised_step
+
+
+@dataclasses.dataclass(frozen=True)
+class BCPNNHeadConfig:
+    feature_dim: int          # trunk hidden size (pooled)
+    hidden_hc: int = 16
+    hidden_mc: int = 64
+    n_classes: int = 10
+    nact_hi: int = 0          # 0 = dense connectivity
+    alpha: float = 1e-2
+    struct_every: int = 0
+    support_noise: float = 3.0
+    noise_steps: int = 50     # anneal fast: heads see few online batches
+    encode_gain: float = 4.0  # rate-encoding sharpness (sigmoid temp)
+
+    def network_config(self) -> BCPNNConfig:
+        return BCPNNConfig(
+            input_hc=self.feature_dim,
+            input_mc=2,
+            hidden_hc=self.hidden_hc,
+            hidden_mc=self.hidden_mc,
+            n_classes=self.n_classes,
+            nact_hi=self.nact_hi if self.nact_hi > 0 else self.feature_dim,
+            alpha=self.alpha,
+            struct_every=self.struct_every,
+            support_noise=self.support_noise,
+            noise_steps=self.noise_steps,
+        )
+
+
+def init_head(cfg: BCPNNHeadConfig, key: jax.Array) -> BCPNNState:
+    return init_network(cfg.network_config(), key)
+
+
+def encode_features(feats: jax.Array, gain: float = 4.0) -> jax.Array:
+    """(B, F) trunk features -> (B, 2F) rate-coded input hypercolumns.
+
+    Features are squashed to [0,1] with a sharpened logistic before
+    complement-pair encoding.  The gain matters: near-0.5 rates make
+    p_ij ~ p_i p_j (no extractable information); gain ~4 pushes encodings
+    toward confident (0/1) rates, which is what the Bayesian rule needs.
+    """
+    return encode_scalar_hcs(jax.nn.sigmoid(gain * feats))
+
+
+def head_unsupervised(state: BCPNNState, cfg: BCPNNHeadConfig, feats: jax.Array) -> BCPNNState:
+    return unsupervised_step(state, cfg.network_config(),
+                             encode_features(feats, cfg.encode_gain))
+
+
+def head_supervised(state: BCPNNState, cfg: BCPNNHeadConfig, feats: jax.Array,
+                    labels: jax.Array) -> BCPNNState:
+    return supervised_step(state, cfg.network_config(),
+                           encode_features(feats, cfg.encode_gain), labels)
+
+
+def head_predict(state: BCPNNState, cfg: BCPNNHeadConfig, feats: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    return infer(state, cfg.network_config(),
+                 encode_features(feats, cfg.encode_gain))

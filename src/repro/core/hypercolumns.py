@@ -1,0 +1,68 @@
+"""Hypercolumn/minicolumn geometry and divisive normalization.
+
+A BCPNN layer is a population of H hypercolumns (HCs), each containing M
+minicolumns (MCs).  Unit activity lives in a flat vector of N = H*M rates;
+divisive normalization is a softmax *within* each hypercolumn, so the M
+minicolumns of one HC always form a probability distribution (the paper's
+"discrete probability estimate" per input attribute).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGeom:
+    """Geometry of one BCPNN population layer."""
+
+    H: int  # hypercolumns
+    M: int  # minicolumns per hypercolumn
+
+    @property
+    def N(self) -> int:
+        return self.H * self.M
+
+    def blocked(self, x: jax.Array) -> jax.Array:
+        """(..., N) -> (..., H, M)."""
+        return x.reshape(*x.shape[:-1], self.H, self.M)
+
+    def flat(self, x: jax.Array) -> jax.Array:
+        """(..., H, M) -> (..., N)."""
+        return x.reshape(*x.shape[:-2], self.H * self.M)
+
+
+def hc_softmax(support: jax.Array, geom: LayerGeom, gain: float = 1.0) -> jax.Array:
+    """Softmax within each hypercolumn (divisive normalization / soft-WTA).
+
+    support: (..., N) log-domain support values.
+    Returns rates in [0, 1] summing to 1 within each HC.
+    """
+    s = geom.blocked(support) * gain
+    s = s - jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.exp(s)
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    return geom.flat(out)
+
+
+def hc_hardmax(support: jax.Array, geom: LayerGeom) -> jax.Array:
+    """One-hot winner per hypercolumn (hard-WTA), used at inference."""
+    s = geom.blocked(support)
+    idx = jnp.argmax(s, axis=-1)
+    out = jax.nn.one_hot(idx, geom.M, dtype=support.dtype)
+    return geom.flat(out)
+
+
+def encode_scalar_hcs(x: jax.Array) -> jax.Array:
+    """Encode scalar features in [0,1] as complementary-pair hypercolumns.
+
+    x: (..., F) in [0, 1]  ->  (..., 2F) with each feature f becoming an HC
+    of two minicolumns (x_f, 1 - x_f).  This is the standard rate encoding
+    used for grayscale pixels in the BCPNN literature (each pixel = one
+    input attribute; its two MCs are mutually exclusive value estimates).
+    """
+    x = jnp.clip(x, 0.0, 1.0)
+    pair = jnp.stack([x, 1.0 - x], axis=-1)  # (..., F, 2)
+    return pair.reshape(*x.shape[:-1], x.shape[-1] * 2)

@@ -1,0 +1,141 @@
+"""The paper's three-population network: input -> hidden -> output.
+
+Two projections connect the populations (input-hidden and hidden-output).
+The kernel supports the paper's three execution modes sharing one
+pipeline:
+
+  * unsupervised  — forward to hidden, update input-hidden plasticity
+  * supervised    — forward to hidden (frozen), update hidden-output
+                    plasticity with label one-hots as target activity
+  * inference     — forward only, no state writes (the paper's smaller /
+                    faster inference-only bitstream; here a separate jit
+                    path with no trace outputs)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bcpnn_layer import Projection, ProjSpec, forward, init_projection, learn, rewire, support
+from .hypercolumns import LayerGeom, hc_softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class BCPNNConfig:
+    """Static network configuration (paper Table 1 schema)."""
+
+    input_hc: int          # input hypercolumns (e.g. 28*28 pixels)
+    input_mc: int = 2      # minicolumns per input HC (complement pairs)
+    hidden_hc: int = 32
+    hidden_mc: int = 128
+    n_classes: int = 10
+    nact_hi: int = 128     # active input HCs per hidden HC
+    alpha: float = 1e-3
+    eps: float = 1e-4
+    gain: float = 1.0
+    struct_every: int = 0  # steps between rewires; 0 = no structural plasticity
+    # Exploration noise on the hidden support during unsupervised learning
+    # (linearly annealed to zero over noise_steps).  This is the symmetry-
+    # breaking "neuronal noise" that prevents minicolumn collapse and drives
+    # the soft-WTA clustering to use all minicolumns.
+    support_noise: float = 3.0
+    noise_steps: int = 500
+
+    @property
+    def input_geom(self) -> LayerGeom:
+        return LayerGeom(self.input_hc, self.input_mc)
+
+    @property
+    def hidden_geom(self) -> LayerGeom:
+        return LayerGeom(self.hidden_hc, self.hidden_mc)
+
+    @property
+    def output_geom(self) -> LayerGeom:
+        # classification output = one WTA hypercolumn over the classes
+        return LayerGeom(1, self.n_classes)
+
+    def ih_spec(self) -> ProjSpec:
+        return ProjSpec(self.input_geom, self.hidden_geom, self.alpha,
+                        self.eps, self.gain, self.nact_hi)
+
+    def ho_spec(self) -> ProjSpec:
+        return ProjSpec(self.hidden_geom, self.output_geom, self.alpha,
+                        self.eps, self.gain, None)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BCPNNState:
+    """All learnable state (a pytree — checkpointable, shardable)."""
+
+    ih: Projection
+    ho: Projection
+    step: jax.Array  # scalar int32 streaming-step counter
+    key: jax.Array   # PRNG key for exploration noise
+
+
+def init_network(cfg: BCPNNConfig, key: jax.Array) -> BCPNNState:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return BCPNNState(
+        ih=init_projection(cfg.ih_spec(), k1),
+        ho=init_projection(cfg.ho_spec(), k2),
+        step=jnp.zeros((), jnp.int32),
+        key=k3,
+    )
+
+
+# ---------------------------------------------------------------- modes --
+
+def hidden_rates(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array) -> jax.Array:
+    return forward(state.ih, cfg.ih_spec(), x)
+
+
+def _noisy_hidden(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Hidden rates with annealed exploration noise on the support."""
+    spec = cfg.ih_spec()
+    s = support(state.ih, spec, x)
+    amp = cfg.support_noise * jnp.maximum(
+        0.0, 1.0 - state.step.astype(jnp.float32) / max(1, cfg.noise_steps))
+    s = s + amp * jax.random.normal(key, s.shape, s.dtype)
+    return hc_softmax(s, cfg.hidden_geom, cfg.gain)
+
+
+def unsupervised_step(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array) -> BCPNNState:
+    """One streaming batch of unsupervised representation learning."""
+    spec = cfg.ih_spec()
+    key, sub = jax.random.split(state.key)
+    h = _noisy_hidden(state, cfg, x, sub)
+    ih = learn(state.ih, spec, x, h)
+    if cfg.struct_every > 0:
+        ih = jax.lax.cond(
+            (state.step + 1) % cfg.struct_every == 0,
+            lambda p: rewire(p, spec),
+            lambda p: p,
+            ih,
+        )
+    return BCPNNState(ih=ih, ho=state.ho, step=state.step + 1, key=key)
+
+
+def supervised_step(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array,
+                    labels: jax.Array) -> BCPNNState:
+    """One streaming batch of the supervised readout (labels: (B,) int)."""
+    h = forward(state.ih, cfg.ih_spec(), x)
+    y = jax.nn.one_hot(labels, cfg.n_classes, dtype=h.dtype)
+    ho = learn(state.ho, cfg.ho_spec(), h, y)
+    return BCPNNState(ih=state.ih, ho=ho, step=state.step + 1, key=state.key)
+
+
+def infer(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Inference-only path: class probabilities + argmax predictions.
+
+    No trace reads beyond the folded weights and no state writes — the
+    analogue of the paper's resource-light inference-only configuration.
+    """
+    h = forward(state.ih, cfg.ih_spec(), x)
+    s = support(state.ho, cfg.ho_spec(), h)
+    probs = hc_softmax(s, cfg.output_geom, cfg.gain)
+    return probs, jnp.argmax(probs, axis=-1)

@@ -1,0 +1,111 @@
+"""Exponential probability traces — the memory of a BCPNN projection.
+
+Three traces are kept per projection (paper §3): the marginal activation
+probabilities of the pre-synaptic units (p_i), of the post-synaptic units
+(p_j), and their joint probability (p_ij).  All are exponential moving
+averages of (batch-mean) rates with a shared smoothing factor
+``alpha = dt / tau_p``.
+
+On the FPGA these are the eight "local synaptic state variables" streamed
+through FIFO stages; here they are a pytree updated by one fused kernel
+(see kernels/bcpnn_update.py) or the pure-jnp path below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Traces:
+    """Probability traces of one projection (pre: Ni units, post: Nj units)."""
+
+    pi: jax.Array   # (Ni,)  pre-synaptic marginal
+    pj: jax.Array   # (Nj,)  post-synaptic marginal
+    pij: jax.Array  # (Ni, Nj) joint
+    t: jax.Array    # scalar int32 update counter (for bias correction)
+
+
+def init_traces(ni: int, nj: int, mi: int, mj: int, dtype=jnp.float32,
+                key: jax.Array | None = None, init_noise: float = 0.1) -> Traces:
+    """Uniform-prior initialization: every MC equally likely within its HC.
+
+    The joint trace gets a small multiplicative log-normal perturbation:
+    without it the network is perfectly symmetric (uniform support ->
+    uniform hidden activity -> p_ij == p_i p_j forever) and unsupervised
+    learning can never differentiate the minicolumns.
+    """
+    pi0 = 1.0 / mi
+    pj0 = 1.0 / mj
+    pij = jnp.full((ni, nj), pi0 * pj0, dtype=dtype)
+    if key is not None and init_noise > 0:
+        pij = pij * jnp.exp(init_noise * jax.random.normal(key, (ni, nj), dtype))
+    return Traces(
+        pi=jnp.full((ni,), pi0, dtype=dtype),
+        pj=jnp.full((nj,), pj0, dtype=dtype),
+        pij=pij,
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_traces(tr: Traces, x: jax.Array, y: jax.Array, alpha: float) -> Traces:
+    """One streaming step of the Hebbian-Bayesian trace update.
+
+    x: (B, Ni) pre-synaptic rates; y: (B, Nj) post-synaptic rates.
+    The batch-mean co-activation ⟨x⊗y⟩ = XᵀY / B is an MXU matmul — the TPU
+    analogue of the FPGA's joint-probability accumulation stream.
+
+    The effective smoothing is ``max(1/(t+1), alpha)``: a true running mean
+    while young (bias correction away from the uniform prior — crucial for
+    the single supervised pass of the paper's protocol), annealing into the
+    fixed-time-constant EMA of the streaming regime.
+    """
+    b = x.shape[0]
+    xm = jnp.mean(x, axis=0)
+    ym = jnp.mean(y, axis=0)
+    co = (x.T @ y) / b
+    a = jnp.maximum(1.0 / (tr.t.astype(tr.pij.dtype) + 1.0),
+                    jnp.asarray(alpha, tr.pij.dtype))
+    one = 1.0 - a
+    return Traces(
+        pi=one * tr.pi + a * xm,
+        pj=one * tr.pj + a * ym,
+        pij=one * tr.pij + a * co,
+        t=tr.t + 1,
+    )
+
+
+def weights_from_traces(
+    tr: Traces, eps: float = 1e-4
+) -> Tuple[jax.Array, jax.Array]:
+    """Bayesian weight/bias readout:  b_j = log p_j,  w_ij = log p_ij/(p_i p_j).
+
+    eps floors keep the logs finite for never-active units (paper keeps
+    fp32; so do we — the increments alpha*x are too small for bf16).
+    """
+    pi = jnp.clip(tr.pi, eps, 1.0)
+    pj = jnp.clip(tr.pj, eps, 1.0)
+    pij = jnp.clip(tr.pij, eps * eps, 1.0)
+    w = jnp.log(pij) - (jnp.log(pi)[:, None] + jnp.log(pj)[None, :])
+    b = jnp.log(pj)
+    return w, b
+
+
+def mutual_information(tr: Traces, hi: int, mi: int, hj: int, mj: int,
+                       eps: float = 1e-4) -> jax.Array:
+    """Mutual information between input HC i and output HC j, (Hi, Hj).
+
+    MI_ij = Σ_{m∈i, n∈j} p_mn log( p_mn / (p_m p_n) ) — the score that
+    drives structural plasticity (which input attributes carry information
+    about which hidden code).  Computed fully on device (the paper ran this
+    on the host; see DESIGN.md §2).
+    """
+    w, _ = weights_from_traces(tr, eps)
+    pij = jnp.clip(tr.pij, eps * eps, 1.0)
+    contrib = pij * w  # (Ni, Nj)
+    blocked = contrib.reshape(hi, mi, hj, mj)
+    return jnp.sum(blocked, axis=(1, 3))  # (Hi, Hj)

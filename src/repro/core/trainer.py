@@ -1,0 +1,109 @@
+"""Streaming trainer for BCPNN — the host-side driver of the accelerator.
+
+The paper's semi-unsupervised protocol (§5): N epochs of unsupervised
+representation learning on the input-hidden projection, ONE supervised
+pass on the hidden-output projection, then inference.  Epochs run as a
+single jit'd ``lax.scan`` over batch-major data, so the whole epoch is one
+device program — the TPU analogue of keeping the FPGA pipeline hot.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import (
+    BCPNNConfig,
+    BCPNNState,
+    infer,
+    init_network,
+    supervised_step,
+    unsupervised_step,
+)
+
+
+def _batchify(x: np.ndarray, batch: int) -> np.ndarray:
+    """Trim to a whole number of batches and reshape batch-major."""
+    nb = x.shape[0] // batch
+    return x[: nb * batch].reshape(nb, batch, *x.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def unsupervised_epoch(state: BCPNNState, cfg: BCPNNConfig, xs: jax.Array) -> BCPNNState:
+    """xs: (nbatch, B, Ni) — one full unsupervised epoch on device."""
+    def body(st, x):
+        return unsupervised_step(st, cfg, x), None
+    state, _ = jax.lax.scan(body, state, xs)
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def supervised_epoch(state: BCPNNState, cfg: BCPNNConfig, xs: jax.Array,
+                     ys: jax.Array) -> BCPNNState:
+    def body(st, xy):
+        x, y = xy
+        return supervised_step(st, cfg, x, y), None
+    state, _ = jax.lax.scan(body, state, (xs, ys))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def eval_batches(state: BCPNNState, cfg: BCPNNConfig, xs: jax.Array,
+                 ys: jax.Array) -> jax.Array:
+    """Mean accuracy over (nbatch, B, ...) eval data."""
+    def body(_, xy):
+        x, y = xy
+        _, pred = infer(state, cfg, x)
+        return None, jnp.mean((pred == y).astype(jnp.float32))
+    _, accs = jax.lax.scan(body, None, (xs, ys))
+    return jnp.mean(accs)
+
+
+class Trainer:
+    """End-to-end driver mirroring the paper's experimental protocol."""
+
+    def __init__(self, cfg: BCPNNConfig, seed: int = 0):
+        self.cfg = cfg
+        self.state = init_network(cfg, jax.random.PRNGKey(seed))
+
+    def fit(
+        self,
+        x_train: np.ndarray,
+        y_train: np.ndarray,
+        epochs: int,
+        batch: int = 128,
+        log: bool = False,
+    ) -> Dict[str, float]:
+        """Unsupervised epochs + one supervised pass.  Returns timings."""
+        xs = jnp.asarray(_batchify(x_train, batch))
+        ys = jnp.asarray(_batchify(y_train, batch))
+        t0 = time.perf_counter()
+        for e in range(epochs):
+            self.state = unsupervised_epoch(self.state, self.cfg, xs)
+            if log:
+                jax.block_until_ready(self.state.ih.w)
+                print(f"  unsupervised epoch {e + 1}/{epochs} done")
+        jax.block_until_ready(self.state.ih.w)
+        t1 = time.perf_counter()
+        self.state = supervised_epoch(self.state, self.cfg, xs, ys)
+        jax.block_until_ready(self.state.ho.w)
+        t2 = time.perf_counter()
+        n_img = xs.shape[0] * xs.shape[1]
+        return {
+            "unsup_s": t1 - t0,
+            "sup_s": t2 - t1,
+            "train_ms_per_img": 1e3 * (t1 - t0) / max(1, n_img * epochs),
+        }
+
+    def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 128) -> float:
+        xs = jnp.asarray(_batchify(x, batch))
+        ys = jnp.asarray(_batchify(y, batch))
+        return float(eval_batches(self.state, self.cfg, xs, ys))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        _, pred = infer(self.state, self.cfg, jnp.asarray(x))
+        return np.asarray(pred)

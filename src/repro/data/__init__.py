@@ -1,0 +1,2 @@
+from .synthetic import Dataset, encode_images, load_or_synthesize, make_synthetic
+from .pipeline import Prefetcher, TokenStream, batch_indices

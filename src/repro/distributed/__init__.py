@@ -1,0 +1,3 @@
+from .sharding import (DEFAULT_RULES, data_shards, make_rules, named_sharding,
+                       set_context, shard, sharding_context, spec_for)
+from .fault import StepTimer, describe_failure_domains, elastic_mesh

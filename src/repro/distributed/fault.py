@@ -1,0 +1,74 @@
+"""Fault-tolerance utilities: straggler detection and elastic meshes.
+
+Straggler mitigation at 1000+ nodes is observability first: per-step wall
+times are tracked online (median + MAD), outlier steps are attributed and
+logged so the scheduler can drain/replace slow hosts.  Elastic restart is
+mesh rebuilding from whatever devices remain + checkpoint resharding
+(checkpoint/ckpt.py restores onto the new mesh's shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """Online step-time tracker with robust outlier detection."""
+
+    window: int = 50
+    threshold: float = 3.0  # MADs above median = straggler event
+    _times: List[float] = dataclasses.field(default_factory=list)
+    _t0: Optional[float] = None
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        hist = self._times[-self.window:]
+        if len(hist) >= 8:
+            med = float(np.median(hist))
+            mad = float(np.median(np.abs(np.asarray(hist) - med))) + 1e-9
+            if dt > med + self.threshold * 1.4826 * mad:
+                self.events.append({"step": step, "time": dt, "median": med})
+        self._times.append(dt)
+        return dt
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+def elastic_mesh(preferred_shape, axis_names, devices=None) -> Mesh:
+    """Build the largest mesh of `preferred_shape`'s aspect that fits the
+    currently-available devices (drop data-parallel rows for lost hosts).
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    shape = list(preferred_shape)
+    # shrink the data axis (first non-model axis) until the mesh fits
+    total = int(np.prod(shape))
+    while total > n and shape[0] > 1:
+        shape[0] -= 1
+        total = int(np.prod(shape))
+    if total > n:
+        raise RuntimeError(f"cannot build mesh {preferred_shape} from {n} devices")
+    use = np.asarray(devices[:total]).reshape(shape)
+    return Mesh(use, axis_names)
+
+
+def describe_failure_domains(mesh: Mesh) -> dict:
+    """Summarize how mesh axes map to failure domains (host/pod)."""
+    hosts = {}
+    for d in mesh.devices.flat:
+        hosts.setdefault(getattr(d, "process_index", 0), []).append(d.id)
+    return {"n_devices": mesh.devices.size, "n_hosts": len(hosts),
+            "axis_names": list(mesh.axis_names),
+            "axis_sizes": list(mesh.devices.shape)}

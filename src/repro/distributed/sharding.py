@@ -1,0 +1,127 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names
+(batch/seq/embed/heads/...), the launcher binds them to physical mesh axes.
+
+This keeps every model mesh-agnostic: the same code runs on 1 CPU device
+(no context -> constraints are no-ops), a 16x16 pod, or the 2x16x16
+multi-pod mesh.  Rules drop to replication automatically when a dimension
+does not divide the mesh axis (e.g. 8 KV heads over a 16-way model axis).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+_CTX: dict = {"mesh": None, "rules": {}}
+
+# Default logical -> physical bindings for the production meshes.
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),   # pod axis absent on single-pod meshes
+    "seq": None,                # residual-stream sequence axis (SP binds to model)
+    "act_seq": None,            # block-internal sequence axis (never on model with SP)
+    "embed": "model",           # residual stream d_model — shards remat saves
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "tp": "model",              # generic tensor-parallel weight dim
+    "row_in": "model",          # row-parallel contraction dim
+    "row_out": "data",          # row-parallel output dim
+    "vocab": "model",
+    "expert": "model",
+    "fsdp": "data",             # parameter/optimizer-state sharding (ZeRO-3)
+    "conv": None,
+    "state": None,
+    "cache_seq": None,          # KV-cache sequence axis (bind to model for long ctx)
+}
+
+
+def set_context(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = dict(rules or {})
+
+
+@contextmanager
+def sharding_context(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    old = (_CTX["mesh"], _CTX["rules"])
+    set_context(mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX["mesh"], _CTX["rules"] = old
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Axis]] = None) -> Dict[str, Axis]:
+    """Resolve DEFAULT_RULES against the mesh's actual axis names."""
+    names = set(mesh.axis_names)
+    rules: Dict[str, Axis] = {}
+    for k, v in {**DEFAULT_RULES, **(overrides or {})}.items():
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in names)
+            rules[k] = kept if kept else None
+        else:
+            rules[k] = v if (v is None or v in names) else None
+    return rules
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def spec_for(dims: Sequence[Axis], shape: Sequence[int]) -> Optional[P]:
+    """Build a PartitionSpec, dropping axes that don't divide the dim."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return None
+    rules = _CTX["rules"]
+    parts = []
+    for logical, size in zip(dims, shape):
+        phys = rules.get(logical) if isinstance(logical, str) else None
+        if phys is not None and size % _axis_size(mesh, phys) != 0:
+            phys = None
+        parts.append(phys)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *dims: Axis) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without a context)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    assert len(dims) == x.ndim, (dims, x.shape)
+    spec = spec_for(dims, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(dims: Sequence[Axis], shape: Sequence[int]) -> Optional[NamedSharding]:
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(dims, shape))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def data_shards() -> int:
+    """Number of data-parallel shards (MoE dispatch group count)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the BCPNN hot spots (+ pure-jnp oracles)."""
+from .ops import bcpnn_fwd, bcpnn_update, fused_forward, fused_learn, hc_softmax
+from .ref import ref_bcpnn_fwd, ref_bcpnn_update, ref_hc_softmax
+
+__all__ = [
+    "bcpnn_fwd", "bcpnn_update", "fused_forward", "fused_learn", "hc_softmax",
+    "ref_bcpnn_fwd", "ref_bcpnn_update", "ref_hc_softmax",
+]

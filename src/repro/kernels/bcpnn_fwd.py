@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused BCPNN activation stage.
+
+support = bias + x @ w, followed by per-hypercolumn softmax — in ONE
+kernel, so the support matrix never exists in HBM.  This is the TPU
+translation of the paper's stream-dataflow: the FPGA forwards support
+packets from the matmul stage straight into the softmax stage through a
+FIFO; here the MXU accumulator feeds the epilogue in VMEM.
+
+Grid = (B/tb, Nj/tj, Ni/tk) with the contraction innermost; the output
+tile tj must be a multiple of the post-synaptic minicolumn count M so the
+softmax is block-local.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int, n_mc: int, gain: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        s = (acc_ref[...] + b_ref[...]) * gain       # (tb, tj)
+        tb, tj = s.shape
+        s = s.reshape(tb, tj // n_mc, n_mc)
+        s = s - jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s)
+        out = e / jnp.sum(e, axis=-1, keepdims=True)
+        o_ref[...] = out.reshape(tb, tj).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_hc", "n_mc", "gain", "block_b", "block_j", "block_k", "interpret"),
+)
+def bcpnn_fwd_pallas(
+    x: jax.Array,      # (B, Ni)
+    w: jax.Array,      # (Ni, Nj)
+    bias: jax.Array,   # (Nj,)
+    n_hc: int,
+    n_mc: int,
+    gain: float = 1.0,
+    block_b: int = 128,
+    block_j: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, ni = x.shape
+    nj = w.shape[1]
+    assert nj == n_hc * n_mc
+    block_b = min(block_b, b)
+    block_k = min(block_k, ni)
+    block_j = min(block_j, nj)
+    if block_j % n_mc != 0:  # keep HCs whole within a tile
+        block_j = n_mc * max(1, block_j // n_mc)
+    assert b % block_b == 0 and ni % block_k == 0 and nj % block_j == 0, \
+        (b, ni, nj, block_b, block_k, block_j)
+    k_steps = ni // block_k
+    grid = (b // block_b, nj // block_j, k_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, n_mc=n_mc, gain=gain),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_j), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_j), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_j), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, nj), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_j), jnp.float32)],
+        interpret=interpret,
+    )(x, w, bias.reshape(1, nj))

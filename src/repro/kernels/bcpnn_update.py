@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused BCPNN plasticity stage.
+
+One kernel performs, per (Ni, Nj) tile of the projection:
+
+    co      = XᵀY / B                    (MXU, contraction over batch)
+    p_ij'   = (1-α)·p_ij + α·co          (trace EMA)
+    w       = (log p_ij' − log p_i − log p_j) · mask   (Bayesian weights)
+
+On the FPGA these are three pipeline stages connected by FIFOs fed from
+four partitioned HBM channels (paper Opt #3); here each (ti, tj) tile of
+p_ij streams HBM→VMEM once and both outputs stream back once — the joint
+trace and the weight matrix never make an extra HBM round-trip.
+
+Grid = (Ni/ti, Nj/tj, B/tk), contraction innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, y_ref, pij_ref, lpi_ref, lpj_ref, mask_ref, alpha_ref,
+            pij_out_ref, w_out_ref, acc_ref, *, k_steps: int, batch: int, eps: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # x block: (tk, ti) — pre-transposed so the MXU contracts the batch dim.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32).T,
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        alpha = alpha_ref[0, 0]
+        co = acc_ref[...] / batch
+        new_pij = (1.0 - alpha) * pij_ref[...] + alpha * co
+        pij_out_ref[...] = new_pij
+        logp = jnp.log(jnp.clip(new_pij, eps * eps, 1.0))
+        w = logp - (lpi_ref[...].T + lpj_ref[...])
+        w_out_ref[...] = w * mask_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps", "block_i", "block_j", "block_k", "interpret"),
+)
+def bcpnn_update_pallas(
+    pij: jax.Array,     # (Ni, Nj)
+    log_pi: jax.Array,  # (Ni,) log of updated+clipped pre marginals
+    log_pj: jax.Array,  # (Nj,)
+    x: jax.Array,       # (B, Ni)
+    y: jax.Array,       # (B, Nj)
+    mask: jax.Array,    # (Ni, Nj)
+    alpha: jax.Array,   # scalar
+    eps: float = 1e-4,
+    block_i: int = 512,
+    block_j: int = 512,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Returns (new_pij, new_w) — see module docstring."""
+    b, ni = x.shape
+    nj = y.shape[1]
+    block_i = min(block_i, ni)
+    block_j = min(block_j, nj)
+    block_k = min(block_k, b)
+    assert ni % block_i == 0 and nj % block_j == 0 and b % block_k == 0, \
+        (ni, nj, b, block_i, block_j, block_k)
+    k_steps = b // block_k
+    grid = (ni // block_i, nj // block_j, k_steps)
+    kern = functools.partial(_kernel, k_steps=k_steps, batch=b, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, block_i), lambda i, j, k: (k, i)),   # x
+            pl.BlockSpec((block_k, block_j), lambda i, j, k: (k, j)),   # y
+            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),   # pij
+            pl.BlockSpec((1, block_i), lambda i, j, k: (0, i)),         # log_pi
+            pl.BlockSpec((1, block_j), lambda i, j, k: (0, j)),         # log_pj
+            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),   # mask
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),               # alpha
+        ],
+        out_specs=[
+            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ni, nj), jnp.float32),
+            jax.ShapeDtypeStruct((ni, nj), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_i, block_j), jnp.float32)],
+        interpret=interpret,
+    )(x, y, pij, log_pi.reshape(1, ni), log_pj.reshape(1, nj), mask,
+      alpha.reshape(1, 1).astype(jnp.float32))

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: per-hypercolumn softmax (divisive normalization).
+
+The minicolumn dimension M is kept whole inside each block so the
+normalization is block-local; the batch and hypercolumn dimensions tile
+the grid.  VMEM per block: tb * th * M * 4 bytes (default 128*8*128*4 =
+512 KiB, comfortably double-bufferable in ~16 MiB VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(s_ref, o_ref, *, n_mc: int, gain: float):
+    s = s_ref[...].astype(jnp.float32) * gain          # (tb, th*M)
+    tb, tn = s.shape
+    s = s.reshape(tb, tn // n_mc, n_mc)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = out.reshape(tb, tn).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_hc", "n_mc", "gain", "block_b", "block_h", "interpret")
+)
+def hc_softmax_pallas(
+    support: jax.Array,
+    n_hc: int,
+    n_mc: int,
+    gain: float = 1.0,
+    block_b: int = 128,
+    block_h: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """support: (B, n_hc*n_mc) -> rates, softmax within each HC."""
+    b, n = support.shape
+    assert n == n_hc * n_mc, (n, n_hc, n_mc)
+    block_b = min(block_b, b)
+    block_h = min(block_h, n_hc)
+    assert b % block_b == 0 and n_hc % block_h == 0, (b, n_hc, block_b, block_h)
+    bn = block_h * n_mc
+    grid = (b // block_b, n_hc // block_h)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_mc=n_mc, gain=gain),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_b, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), support.dtype),
+        interpret=interpret,
+    )(support)

@@ -1,0 +1,73 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Auto-selects interpret mode off-TPU (this container validates kernels on
+CPU via the Pallas interpreter; on a real TPU the same calls compile to
+Mosaic).  Also provides the fused drop-in replacements for the core's
+activation/plasticity stages (`fused_forward`, `fused_learn`) — the
+"accelerated" path benchmarked against the pure-jnp reference path in
+benchmarks/bench_stream_vs_seq.py, mirroring the paper's sequential vs
+stream-dataflow comparison.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bcpnn_layer import Projection, ProjSpec, _expand_mask
+from ..core.traces import Traces
+from .bcpnn_fwd import bcpnn_fwd_pallas
+from .bcpnn_update import bcpnn_update_pallas
+from .hc_softmax import hc_softmax_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hc_softmax(support: jax.Array, n_hc: int, n_mc: int, gain: float = 1.0,
+               **kw) -> jax.Array:
+    return hc_softmax_pallas(support, n_hc, n_mc, gain,
+                             interpret=_interpret(), **kw)
+
+
+def bcpnn_fwd(x: jax.Array, w: jax.Array, bias: jax.Array, n_hc: int,
+              n_mc: int, gain: float = 1.0, **kw) -> jax.Array:
+    return bcpnn_fwd_pallas(x, w, bias, n_hc, n_mc, gain,
+                            interpret=_interpret(), **kw)
+
+
+def bcpnn_update(pij, log_pi, log_pj, x, y, mask, alpha, eps=1e-4, **kw):
+    return bcpnn_update_pallas(pij, log_pi, log_pj, x, y, mask, alpha,
+                               eps=eps, interpret=_interpret(), **kw)
+
+
+# ------------------------------------------------- fused core stages ----
+
+def fused_forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
+    """Kernel-fused equivalent of core.bcpnn_layer.forward."""
+    return bcpnn_fwd(x, proj.w, proj.b, spec.post.H, spec.post.M, spec.gain)
+
+
+def fused_learn(proj: Projection, spec: ProjSpec, x: jax.Array,
+                y: jax.Array) -> Projection:
+    """Kernel-fused equivalent of core.bcpnn_layer.learn.
+
+    The cheap vector traces (p_i, p_j) update in plain jnp; the O(Ni·Nj)
+    joint-trace EMA + weight recompute run in the fused Pallas kernel.
+    """
+    tr = proj.traces
+    a = jnp.maximum(1.0 / (tr.t.astype(jnp.float32) + 1.0), spec.alpha)
+    pi = (1.0 - a) * tr.pi + a * jnp.mean(x, axis=0)
+    pj = (1.0 - a) * tr.pj + a * jnp.mean(y, axis=0)
+    log_pi = jnp.log(jnp.clip(pi, spec.eps, 1.0))
+    log_pj = jnp.log(jnp.clip(pj, spec.eps, 1.0))
+    mask_units = _expand_mask(proj.mask, spec)
+    new_pij, w = bcpnn_update(tr.pij, log_pi, log_pj, x, y, mask_units,
+                              a, eps=spec.eps)
+    b = log_pj
+    return Projection(
+        traces=Traces(pi=pi, pj=pj, pij=new_pij, t=tr.t + 1),
+        w=w, b=b, mask=proj.mask,
+    )

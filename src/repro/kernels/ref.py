@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, sweeping shapes/dtypes in tests/test_kernels.py) and the
+"sequential baseline" of the paper's §4.1 optimization story: each oracle
+materializes every intermediate in HBM, exactly what the fused kernels
+avoid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_hc_softmax(support: jax.Array, n_hc: int, n_mc: int,
+                   gain: float = 1.0) -> jax.Array:
+    """Per-hypercolumn softmax.  support: (B, n_hc * n_mc)."""
+    b = support.shape[0]
+    s = support.reshape(b, n_hc, n_mc).astype(jnp.float32) * gain
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    out = e / jnp.sum(e, axis=-1, keepdims=True)
+    return out.reshape(b, n_hc * n_mc).astype(support.dtype)
+
+
+def ref_bcpnn_fwd(x: jax.Array, w: jax.Array, bias: jax.Array,
+                  n_hc: int, n_mc: int, gain: float = 1.0) -> jax.Array:
+    """Activation stage: support matmul + bias + per-HC softmax.
+
+    x: (B, Ni), w: (Ni, Nj), bias: (Nj,)  ->  rates (B, Nj).
+    """
+    support = x.astype(jnp.float32) @ w.astype(jnp.float32) + bias.astype(jnp.float32)
+    return ref_hc_softmax(support, n_hc, n_mc, gain).astype(x.dtype)
+
+
+def ref_bcpnn_update(
+    pij: jax.Array,      # (Ni, Nj) joint trace
+    log_pi: jax.Array,   # (Ni,) log of (clipped) updated pre marginals
+    log_pj: jax.Array,   # (Nj,) log of (clipped) updated post marginals
+    x: jax.Array,        # (B, Ni) pre rates
+    y: jax.Array,        # (B, Nj) post rates
+    mask: jax.Array,     # (Ni, Nj) unit-level structural mask
+    alpha: jax.Array,    # scalar effective smoothing
+    eps: float = 1e-4,
+):
+    """Plasticity stage: trace EMA + Bayesian log-weight recompute.
+
+    Returns (new_pij, new_w).  The co-activation XᵀY/B is the MXU matmul;
+    the log-weight epilogue is fused so p_ij never round-trips to HBM
+    between the two stages (paper Opt #2).
+    """
+    b = x.shape[0]
+    co = (x.astype(jnp.float32).T @ y.astype(jnp.float32)) / b
+    new_pij = (1.0 - alpha) * pij + alpha * co
+    w = jnp.log(jnp.clip(new_pij, eps * eps, 1.0)) - (log_pi[:, None] + log_pj[None, :])
+    return new_pij, w * mask

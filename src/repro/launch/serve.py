@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, smoke
+from ..data.pipeline import TokenStream
+from ..distributed.sharding import make_rules, sharding_context
+from ..models import lm
+from .mesh import make_local_mesh, make_production_mesh
+from .steps import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", choices=["local", "single", "multi"],
+                    default="local")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke(cfg)
+    mesh = (make_local_mesh() if args.mesh == "local"
+            else make_production_mesh(multi_pod=(args.mesh == "multi")))
+    seq_len = args.prompt_len + args.gen
+
+    with sharding_context(mesh, make_rules(mesh)), mesh:
+        params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+        stream = TokenStream(cfg.vocab, seed=args.seed)
+        prompts = jnp.asarray(stream.batch(0, args.batch, args.prompt_len))
+        frames = (jnp.asarray(np.random.default_rng(0).normal(
+            0, 1, (args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+            if cfg.enc_layers else None)
+        patches = (jnp.asarray(np.random.default_rng(1).normal(
+            0, 1, (args.batch, cfg.vision_patches, cfg.d_model)).astype(np.float32))
+            if cfg.vision_patches else None)
+
+        t0 = time.perf_counter()
+        logits, cache = jax.jit(
+            lambda p, t: lm.prefill(p, cfg, t, seq_len, patches=patches,
+                                    frames=frames))(params, prompts)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        step_fn = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        tokens = jnp.argmax(logits, -1)
+        out = [tokens]
+        t0 = time.perf_counter()
+        for _ in range(args.gen - 1):
+            logits, cache = step_fn(params, cache, tokens)
+            tokens = jnp.argmax(logits, -1)
+            out.append(tokens)
+        jax.block_until_ready(tokens)
+        t_decode = time.perf_counter() - t0
+        gen = np.stack([np.asarray(t) for t in out], 1)
+        print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
+              f"{t_prefill*1e3:.1f}ms; decode {args.gen - 1} steps in "
+              f"{t_decode*1e3:.1f}ms "
+              f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+        print(f"[serve] sample continuation: {gen[0][:12].tolist()}")
+        assert not np.any(np.isnan(gen)), "NaN tokens"
+
+
+if __name__ == "__main__":
+    main()

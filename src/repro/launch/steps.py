@@ -1,0 +1,151 @@
+"""jit-able train / prefill / serve step builders + abstract input specs.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the real train/serve drivers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import named_sharding
+from ..models import lm
+from ..models.params import cache_shardings, param_shardings
+from ..optim import AdamWConfig, apply_updates, compress_grads, init_opt_state
+
+
+# ------------------------------------------------------------- factories --
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    compress: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return lm.lm_loss(p, cfg, batch["tokens"],
+                              patches=batch.get("patches"),
+                              frames=batch.get("frames"))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if compress:
+            grads, new_err = compress_grads(grads, opt_state["err"])
+        new_params, new_opt = apply_updates(
+            opt_cfg, params, grads,
+            {k: v for k, v in opt_state.items() if k != "err"})
+        if compress:
+            new_opt["err"] = new_err
+        return loss, new_params, new_opt
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, cache, tokens) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, seq_len: int):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch["tokens"], seq_len,
+                          patches=batch.get("patches"),
+                          frames=batch.get("frames"))
+    return prefill_step
+
+
+# ----------------------------------------------------------- input specs --
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract specs for one host batch (training / prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.vision_patches > 0:
+        specs["patches"] = _sds((b, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers > 0:
+        specs["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    out = {"tokens": named_sharding(("batch", None),
+                                    (shape.global_batch, shape.seq_len))}
+    if cfg.vision_patches > 0:
+        out["patches"] = named_sharding(
+            ("batch", None, "embed"),
+            (shape.global_batch, cfg.vision_patches, cfg.d_model))
+    if cfg.enc_layers > 0:
+        out["frames"] = named_sharding(
+            ("batch", None, "embed"),
+            (shape.global_batch, cfg.enc_seq, cfg.d_model))
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(aparams):
+    return jax.eval_shape(init_opt_state, aparams)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    def build(params):
+        return lm.init_cache(params, cfg, batch, seq_len, frames=None)
+    return jax.eval_shape(build, abstract_params(cfg))
+
+
+def opt_shardings(aopt, pshardings):
+    """Optimizer moments inherit the param shardings; step is replicated."""
+    return {
+        "mu": pshardings,
+        "nu": pshardings,
+        "step": named_sharding((), ()),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Everything the lowered step consumes, as ShapeDtypeStructs."""
+    aparams = abstract_params(cfg)
+    if shape.kind == "train":
+        return {
+            "params": aparams,
+            "opt_state": abstract_opt_state(aparams),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": aparams, "batch": batch_specs(cfg, shape)}
+    # decode: one new token against a seq_len cache
+    return {
+        "params": aparams,
+        "cache": abstract_cache(cfg, shape.global_batch, shape.seq_len),
+        "tokens": _sds((shape.global_batch,), jnp.int32),
+    }
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    ps = param_shardings(specs["params"])
+    if shape.kind == "train":
+        return {
+            "params": ps,
+            "opt_state": opt_shardings(specs["opt_state"], ps),
+            "batch": batch_shardings(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": ps, "batch": batch_shardings(cfg, shape)}
+    return {
+        "params": ps,
+        "cache": cache_shardings(specs["cache"]),
+        "tokens": named_sharding(("batch",), (shape.global_batch,)),
+    }

@@ -1,0 +1,232 @@
+"""Grouped-query attention with every variant the zoo needs:
+
+  * GQA / MQA / MHA (n_kv_heads <= n_heads)
+  * causal, sliding-window (local) or bidirectional (encoder) masking
+  * query-chunked streaming softmax — scores never materialize for the
+    full (S, S) square, which is what makes prefill_32k representable
+  * gemma2 tanh logit soft-capping, qwen3 per-head qk RMSNorm, qwen1.5
+    QKV biases, cross-attention (whisper decoder)
+  * ring-buffer KV cache decode for local layers, flat cache for global
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .common import Params, dense_init, rms_norm, rope
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, hq * hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, hk * hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, hk * hd), 0, dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), 0, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hk * hd,), dtype)
+        p["bv"] = jnp.zeros((hk * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 kv_x: Optional[jax.Array] = None):
+    """x: (B, S, d) -> q (B,S,Hq,D), k/v (B,Skv,Hk,D)."""
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    skv = kv_x.shape[1]
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, skv, hk, hd)
+    v = v.reshape(b, skv, hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps, plus_one=True)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps, plus_one=True)
+    q = shard(q, "batch", "act_seq", "heads", "head_dim")
+    k = shard(k, "batch", "act_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "act_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _chunk_attend(q_chunk, k, v, q_pos, k_pos, cfg: ModelConfig,
+                  causal: bool) -> jax.Array:
+    """q_chunk: (B,C,Hk,G,D); k,v: (B,S,Hk,D); positions: (C,), (S,)."""
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bchgd,bshd->bhgcs", q_chunk, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, cfg.attn_softcap)
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if cfg.window > 0 and causal:
+        mask &= k_pos[None, :] > q_pos[:, None] - cfg.window
+    # ADDITIVE mask, not where(): where()'s vjp saves the predicate at the
+    # broadcast (B,H,G,C,S) shape per chunk; add's vjp saves nothing, and
+    # the (C,S) where-pred below is batch-free (perf iteration §Perf-0).
+    scores = scores + jnp.where(mask, 0.0, -1e30)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    out = jnp.einsum("bhgcs,bshd->bchgd", probs, v)
+    return out
+
+
+def fill_cache(cfg: ModelConfig, k: jax.Array, v: jax.Array, local: bool,
+               cache_size: int) -> Dict[str, jax.Array]:
+    """Lay prompt K/V (B,S,Hk,D) out in decode-cache format (flat or ring)."""
+    b, s, hk, hd = k.shape
+    use_ring = local and cfg.window > 0 and cache_size <= cfg.window
+    if not use_ring:
+        pad = cache_size - s
+        if pad > 0:
+            zeros = jnp.zeros((b, pad, hk, hd), k.dtype)
+            return {"k": jnp.concatenate([k, zeros], 1),
+                    "v": jnp.concatenate([v, zeros], 1)}
+        return {"k": k[:, -cache_size:], "v": v[:, -cache_size:]}
+    w = cache_size
+    kw, vw = k[:, -w:], v[:, -w:]
+    start = max(0, s - w)
+    slots = (start + jnp.arange(kw.shape[1])) % w
+    buf_k = jnp.zeros((b, w, hk, hd), k.dtype).at[:, slots].set(kw)
+    buf_v = jnp.zeros((b, w, hk, hd), v.dtype).at[:, slots].set(vw)
+    return {"k": buf_k, "v": buf_v}
+
+
+def attend(params: Params, cfg: ModelConfig, x: jax.Array,
+           positions: jax.Array, causal: bool = True, local: bool = False,
+           kv_x: Optional[jax.Array] = None,
+           q_chunk: int = 512,
+           return_kv: bool = False):
+    """Full-sequence attention (training / prefill), query-chunked.
+
+    x: (B, S, d); positions: (S,) int32.  Returns (B, S, d)
+    (plus raw (k, v) when return_kv, for prefill cache priming).
+    """
+    cfg_l = cfg if local else cfg.with_(window=0)
+    b, s, d = x.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hk
+    q, k, v = _project_qkv(params, cfg_l, x, kv_x)
+    q = q.reshape(b, s, hk, g, hd)
+    skv = k.shape[1]
+    kv_pos = positions if kv_x is None else jnp.arange(skv, dtype=jnp.int32)
+    if cfg.rope_theta > 0 and kv_x is None:  # no rope on cross-attention
+        q = rope(q.reshape(b, s, hk * g, hd), positions[None], cfg.rope_theta
+                 ).reshape(b, s, hk, g, hd)
+        k = rope(k, kv_pos[None], cfg.rope_theta)
+
+    nchunk = max(1, s // q_chunk)
+    if s % q_chunk != 0:
+        nchunk = 1
+    if nchunk == 1:
+        out = _chunk_attend(q, k, v, positions, kv_pos, cfg_l, causal)
+    else:
+        qc = q.reshape(b, nchunk, s // nchunk, hk, g, hd)
+        pc = positions.reshape(nchunk, s // nchunk)
+
+        def body(_, qp):
+            qi, pi = qp
+            return None, _chunk_attend(qi, k, v, pi, kv_pos, cfg_l, causal)
+
+        _, outs = jax.lax.scan(
+            body, None, (jnp.moveaxis(qc, 1, 0), pc))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, nchunk, s // nchunk, hk, g, hd)
+    out = out.reshape(b, s, hq * hd)
+    out = out @ params["wo"]
+    out = shard(out, "batch", "seq", "embed")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ------------------------------------------------------------- decoding --
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, local: bool,
+                  dtype) -> Dict[str, jax.Array]:
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    size = min(seq_len, cfg.window) if (local and cfg.window > 0) else seq_len
+    return {
+        "k": jnp.zeros((batch, size, hk, hd), dtype),
+        "v": jnp.zeros((batch, size, hk, hd), dtype),
+    }
+
+
+def decode_attend(params: Params, cfg: ModelConfig, x: jax.Array,
+                  cache: Dict[str, jax.Array], pos: jax.Array,
+                  local: bool = False,
+                  cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current index).
+
+    Global layers use a flat cache written at `pos`; local layers use a
+    ring buffer of size `window`.  Cross-attention reads precomputed
+    encoder K/V and writes nothing.
+    """
+    b = x.shape[0]
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hk
+    scale = hd ** -0.5
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = (x @ params["wq"]).reshape(b, 1, hk, g, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps, plus_one=True)
+        scores = jnp.einsum("bhgd,bshd->bhgs", q[:, 0], k,
+                            preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(_softcap(scores, cfg.attn_softcap), -1).astype(x.dtype)
+        out = jnp.einsum("bhgs,bshd->bhgd", probs, v).reshape(b, 1, hq * hd)
+        return out @ params["wo"], cache
+
+    q, k_new, v_new = _project_qkv(params, cfg, x)
+    if cfg.rope_theta > 0:
+        posv = pos[None, None] if pos.ndim == 0 else pos[:, None]
+        q = rope(q, jnp.broadcast_to(posv, (b, 1)), cfg.rope_theta)
+        k_new = rope(k_new, jnp.broadcast_to(posv, (b, 1)), cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = jnp.mod(pos, size) if (local and cfg.window > 0) else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    k = shard(k, "batch", "cache_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "cache_seq", "kv_heads", "head_dim")
+
+    idx = jnp.arange(size, dtype=jnp.int32)
+    if local and cfg.window > 0:
+        # slot i holds absolute position p_i = pos - ((pos - i) mod size)
+        p_i = pos - jnp.mod(pos - idx, size)
+        valid = (p_i >= 0) & (p_i <= pos) & (p_i > pos - cfg.window)
+    else:
+        valid = idx <= pos
+
+    qh = q.reshape(b, hk, g, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, cfg.attn_softcap)
+    scores = scores + jnp.where(valid, 0.0, -1e30)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v).reshape(b, 1, hq * hd)
+    out = out @ params["wo"]
+    return out, {"k": k, "v": v}

@@ -1,0 +1,455 @@
+"""Generic decoder LM assembling the zoo's sequence mixers.
+
+One model covers all ten assigned architectures through ModelConfig:
+  * layer_pattern — a repeating unit over {g: global attn, l: local attn,
+    r: RG-LRU, m: mamba}; `n_layers // len(pattern)` repeats are scanned
+    with stacked params (small HLO, fast 512-device compiles), the
+    remainder runs unrolled as tail layers.
+  * enc_layers > 0 — adds a whisper-style bidirectional encoder and
+    cross-attention in every decoder block.
+  * vision_patches > 0 — the first P sequence positions take precomputed
+    patch embeddings (stub ViT frontend, per the assignment).
+
+Exposes: init_params, forward (train/prefill), lm_loss, init_cache,
+prefill, decode_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .attention import attend, decode_attend, fill_cache, init_attention, init_kv_cache
+from .common import Params, dense_init, embed_init, layer_norm, mlp, init_mlp, rms_norm
+from .moe import init_moe, moe_ffn
+from .recurrent import (
+    init_mamba, init_mamba_cache, init_rglru, init_rglru_cache,
+    mamba_decode, mamba_mixer, rglru_decode, rglru_mixer,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _norm(cfg: ModelConfig, x: jax.Array, p: Params) -> jax.Array:
+    if cfg.family == "audio":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    plus_one = cfg.post_norms or cfg.embed_scale  # gemma-style norm
+    return rms_norm(x, p["scale"], cfg.norm_eps, plus_one=plus_one)
+
+
+def _init_norm(cfg: ModelConfig, dtype) -> Params:
+    if cfg.family == "audio":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    init = jnp.zeros if (cfg.post_norms or cfg.embed_scale) else jnp.ones
+    return {"scale": init((cfg.d_model,), dtype)}
+
+
+# ------------------------------------------------------------ block init --
+
+def _init_block(key, cfg: ModelConfig, char: str, dtype,
+                with_cross: bool) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": _init_norm(cfg, dtype)}
+    if char in ("g", "l"):
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    elif char == "r":
+        p["rglru"] = init_rglru(ks[0], cfg, dtype)
+    elif char == "m":
+        p["mamba"] = init_mamba(ks[0], cfg, dtype)
+    else:
+        raise ValueError(char)
+    if cfg.post_norms:
+        p["norm1_post"] = _init_norm(cfg, dtype)
+    if with_cross:
+        p["norm_cross"] = _init_norm(cfg, dtype)
+        p["cross"] = init_attention(ks[1], cfg, dtype, cross=True)
+    if cfg.d_ff > 0 or cfg.n_experts > 0:
+        p["norm2"] = _init_norm(cfg, dtype)
+        if cfg.n_experts > 0:
+            p["moe"] = init_moe(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+        if cfg.post_norms:
+            p["norm2_post"] = _init_norm(cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = _dtype(cfg)
+    n_blocks, n_tail = cfg.pattern_blocks
+    keys = jax.random.split(key, 8)
+    with_cross = cfg.enc_layers > 0
+
+    def blocks_for(pos_char: str, k) -> Params:
+        if cfg.scan_layers and n_blocks > 1:
+            ks = jax.random.split(k, n_blocks)
+            return jax.vmap(
+                lambda kk: _init_block(kk, cfg, pos_char, dtype, with_cross)
+            )(ks)
+        return _init_block(k, cfg, pos_char, dtype, with_cross)
+
+    params: Params = {
+        "tok_embed": embed_init(keys[0], (cfg.vocab_padded, cfg.d_model), dtype),
+        "final_norm": _init_norm(cfg, dtype),
+        "blocks": {
+            f"pos{i}_{c}": blocks_for(c, jax.random.fold_in(keys[1], i))
+            for i, c in enumerate(cfg.layer_pattern)
+        },
+        "tail": {
+            f"tail{i}_{cfg.layer_pattern[i % len(cfg.layer_pattern)]}":
+                _init_block(jax.random.fold_in(keys[2], i), cfg,
+                            cfg.layer_pattern[i % len(cfg.layer_pattern)],
+                            dtype, with_cross)
+            for i in range(n_tail)
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[3], (cfg.d_model, cfg.vocab_padded),
+                                       0, dtype)
+    if cfg.rope_theta == 0:  # learned positional embeddings (whisper)
+        params["pos_embed"] = embed_init(keys[4], (32768, cfg.d_model), dtype)
+    if cfg.enc_layers > 0:
+        ek = jax.random.split(keys[5], cfg.enc_layers + 2)
+        params["encoder"] = {
+            "pos_embed": embed_init(ek[0], (cfg.enc_seq, cfg.d_model), dtype),
+            "layers": {
+                f"enc{i}": _init_block(ek[i + 1], cfg, "g", dtype, False)
+                for i in range(cfg.enc_layers)
+            },
+            "final_norm": _init_norm(cfg, dtype),
+        }
+    return params
+
+
+# ----------------------------------------------------------- block apply --
+
+def _apply_block(p: Params, cfg: ModelConfig, char: str, x: jax.Array,
+                 positions: jax.Array, causal: bool,
+                 cross_kv: Optional[Tuple[jax.Array, jax.Array]],
+                 cache_size: int = 0):
+    """One residual block.  cache_size > 0 -> also return a primed cache."""
+    collect = cache_size > 0
+    entry = None
+    h = _norm(cfg, x, p["norm1"])
+    if char in ("g", "l"):
+        out = attend(p["attn"], cfg, h, positions, causal=causal,
+                     local=(char == "l"), return_kv=collect)
+        if collect:
+            h, (k, v) = out
+            entry = fill_cache(cfg, k, v, char == "l", cache_size if char != "l"
+                               or cfg.window == 0 else min(cache_size, cfg.window))
+        else:
+            h = out
+    elif char == "r":
+        out = rglru_mixer(p["rglru"], cfg, h, return_state=collect)
+        h, entry = out if collect else (out, None)
+    else:
+        out = mamba_mixer(p["mamba"], cfg, h, return_state=collect)
+        h, entry = out if collect else (out, None)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p["norm1_post"])
+    x = x + h
+    if cross_kv is not None and "cross" in p:
+        h = _norm(cfg, x, p["norm_cross"])
+        h = _cross_attend(p["cross"], cfg, h, cross_kv)
+        x = x + h
+    if "norm2" in p:
+        h = _norm(cfg, x, p["norm2"])
+        if "moe" in p:
+            h = moe_ffn(p["moe"], cfg, h)
+        else:
+            h = mlp(p["mlp"], h, cfg.mlp)
+        if cfg.post_norms:
+            h = _norm(cfg, h, p["norm2_post"])
+        x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    if collect:
+        return x, entry
+    return x
+
+
+def _cross_attend(p: Params, cfg: ModelConfig, h: jax.Array,
+                  cross_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Cross-attention against precomputed encoder K/V (B, Senc, Hk, D)."""
+    b, s, _ = h.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hk
+    k, v = cross_kv
+    q = (h @ p["wq"]).reshape(b, s, hk, g, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, plus_one=True)
+    scores = jnp.einsum("bchgd,bshd->bhgcs", q, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    probs = jax.nn.softmax(scores, -1).astype(h.dtype)
+    out = jnp.einsum("bhgcs,bshd->bchgd", probs, v).reshape(b, s, hq * hd)
+    return out @ p["wo"]
+
+
+# ----------------------------------------------------------- embeddings --
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 patches: Optional[jax.Array]) -> jax.Array:
+    x = jnp.take(params["tok_embed"], tokens, axis=0).astype(_dtype(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if patches is not None and cfg.vision_patches > 0:
+        p = patches.astype(x.dtype)
+        x = jnp.concatenate([p, x[:, cfg.vision_patches:]], axis=1)
+    return shard(x, "batch", "seq", "embed")
+
+
+# -------------------------------------------------------------- encoder --
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, Senc, d)."""
+    enc = params["encoder"]
+    x = frames.astype(_dtype(cfg)) + enc["pos_embed"][None, : frames.shape[1]]
+    pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+    for name in sorted(enc["layers"]):
+        x = _apply_block(enc["layers"][name], cfg, "g", x, pos,
+                         causal=False, cross_kv=None)
+    return _norm(cfg, x, enc["final_norm"])
+
+
+def cross_kv_from_encoder(cfg: ModelConfig, enc_out: jax.Array,
+                          block_params: Params) -> Tuple[jax.Array, jax.Array]:
+    b, s, _ = enc_out.shape
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ block_params["cross"]["wk"]).reshape(b, s, hk, hd)
+    v = (enc_out @ block_params["cross"]["wv"]).reshape(b, s, hk, hd)
+    return k, v
+
+
+# -------------------------------------------------------------- forward --
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            patches: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            cache_size: int = 0):
+    """Training/prefill forward.  tokens: (B, S) -> hidden (B, S, d).
+
+    cache_size > 0 also returns per-layer primed decode caches (prefill).
+    """
+    x = embed_tokens(params, cfg, tokens, patches)
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if cfg.rope_theta == 0 and "pos_embed" in params:
+        x = x + params["pos_embed"][None, :s]
+
+    enc_out = encode(params, cfg, frames) if cfg.enc_layers > 0 else None
+    n_blocks, _ = cfg.pattern_blocks
+    pattern = cfg.layer_pattern
+    block_names = [f"pos{i}_{c}" for i, c in enumerate(pattern)]
+    collect = cache_size > 0
+
+    def one_repeat(x, rep_params):
+        caches = {}
+        for name, char in zip(block_names, pattern):
+            ckv = (cross_kv_from_encoder(cfg, enc_out, rep_params[name])
+                   if enc_out is not None else None)
+            out = _apply_block(rep_params[name], cfg, char, x, positions,
+                               causal=True, cross_kv=ckv,
+                               cache_size=cache_size)
+            if collect:
+                x, caches[name] = out
+            else:
+                x = out
+        return x, caches
+
+    body = one_repeat
+    if cfg.remat and not collect:
+        body = jax.checkpoint(one_repeat,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers and n_blocks > 1:
+        x, block_caches = jax.lax.scan(
+            lambda carry, rep: body(carry, rep), x, params["blocks"])
+    else:
+        x, block_caches = body(x, params["blocks"])
+
+    tail_caches = {}
+    for name in sorted(params["tail"]):
+        char = name.split("_")[-1]
+        ckv = (cross_kv_from_encoder(cfg, enc_out, params["tail"][name])
+               if enc_out is not None else None)
+        out = _apply_block(params["tail"][name], cfg, char, x, positions,
+                           causal=True, cross_kv=ckv, cache_size=cache_size)
+        if collect:
+            x, tail_caches[name] = out
+        else:
+            x = out
+    x = _norm(cfg, x, params["final_norm"])
+    if collect:
+        return x, block_caches, tail_caches, enc_out
+    return x
+
+
+def logits_for(params: Params, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    head = params.get("lm_head")
+    if head is None:
+        head = params["tok_embed"].T
+    logits = hidden @ head.astype(hidden.dtype)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def lm_loss(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            patches: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross-entropy, seq-chunked so (B,S,V) never materializes."""
+    hidden = forward(params, cfg, tokens, patches, frames)
+    b, s, d = hidden.shape
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)], 1)
+
+    chunk = min(cfg.lmhead_chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nchunk = s // chunk
+    hc = jnp.moveaxis(hidden.reshape(b, nchunk, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nchunk, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nchunk, chunk), 1, 0)
+
+    def chunk_loss(_, hmt):
+        h, t, m = hmt
+        logits = logits_for(params, cfg, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return None, jnp.sum((logz - gold) * m)
+
+    _, losses = jax.lax.scan(chunk_loss, None, (hc, tc, mc))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------- decode --
+
+def init_cache(params: Params, cfg: ModelConfig, batch: int, seq_len: int,
+               frames: Optional[jax.Array] = None) -> Dict[str, Any]:
+    """Decode cache for every layer (+ encoder cross K/V for enc-dec)."""
+    dtype = _dtype(cfg)
+    n_blocks, n_tail = cfg.pattern_blocks
+
+    def cache_for(char: str):
+        if char in ("g", "l"):
+            return init_kv_cache(cfg, batch, seq_len, char == "l", dtype)
+        if char == "r":
+            return init_rglru_cache(cfg, batch, dtype)
+        return init_mamba_cache(cfg, batch, dtype)
+
+    def stacked(char: str):
+        c = cache_for(char)
+        if cfg.scan_layers and n_blocks > 1:
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_blocks,) + a.shape), c)
+        return c
+
+    cache: Dict[str, Any] = {
+        "blocks": {f"pos{i}_{c}": stacked(c)
+                   for i, c in enumerate(cfg.layer_pattern)},
+        "tail": {
+            f"tail{i}_{cfg.layer_pattern[i % len(cfg.layer_pattern)]}":
+                cache_for(cfg.layer_pattern[i % len(cfg.layer_pattern)])
+            for i in range(n_tail)
+        },
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.enc_layers > 0:
+        enc_out = encode(params, cfg, frames) if frames is not None else \
+            jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)
+        cache["enc_out"] = enc_out
+    return cache
+
+
+def _decode_block(p: Params, cfg: ModelConfig, char: str, x: jax.Array,
+                  c: Dict[str, jax.Array], pos: jax.Array,
+                  enc_out: Optional[jax.Array]):
+    h = _norm(cfg, x, p["norm1"])
+    if char in ("g", "l"):
+        h, c = decode_attend(p["attn"], cfg, h, c, pos, local=(char == "l"))
+    elif char == "r":
+        h, c = rglru_decode(p["rglru"], cfg, h, c)
+    else:
+        h, c = mamba_decode(p["mamba"], cfg, h, c)
+    if cfg.post_norms:
+        h = _norm(cfg, h, p["norm1_post"])
+    x = x + h
+    if enc_out is not None and "cross" in p:
+        h = _norm(cfg, x, p["norm_cross"])
+        ckv = cross_kv_from_encoder(cfg, enc_out, p)
+        h, _ = decode_attend(p["cross"], cfg, h, c, pos, cross_kv=ckv)
+        x = x + h
+    if "norm2" in p:
+        h = _norm(cfg, x, p["norm2"])
+        if "moe" in p:
+            h = moe_ffn(p["moe"], cfg, h)
+        else:
+            h = mlp(p["mlp"], h, cfg.mlp)
+        if cfg.post_norms:
+            h = _norm(cfg, h, p["norm2_post"])
+        x = x + h
+    return x, c
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One serving step: tokens (B,) -> logits (B, V), updated cache."""
+    pos = cache["pos"]
+    x = embed_tokens(params, cfg, tokens[:, None], None)
+    if cfg.rope_theta == 0 and "pos_embed" in params:
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1)[None]
+    enc_out = cache.get("enc_out")
+    n_blocks, _ = cfg.pattern_blocks
+    pattern = cfg.layer_pattern
+    block_names = [f"pos{i}_{c}" for i, c in enumerate(pattern)]
+
+    def one_repeat(x, rep):
+        rep_params, rep_cache = rep
+        new_cache = {}
+        for name, char in zip(block_names, pattern):
+            x, new_cache[name] = _decode_block(
+                rep_params[name], cfg, char, x, rep_cache[name], pos, enc_out)
+        return x, new_cache
+
+    if cfg.scan_layers and n_blocks > 1:
+        x, new_block_cache = jax.lax.scan(
+            one_repeat, x, (params["blocks"], cache["blocks"]))
+    else:
+        x, new_block_cache = one_repeat(x, (params["blocks"], cache["blocks"]))
+
+    new_tail = {}
+    for name in sorted(cache["tail"]):
+        char = name.split("_")[-1]
+        x, new_tail[name] = _decode_block(
+            params["tail"][name], cfg, char, x, cache["tail"][name], pos, enc_out)
+
+    x = _norm(cfg, x, params["final_norm"])
+    logits = logits_for(params, cfg, x)[:, 0]
+    new_cache = dict(cache, blocks=new_block_cache, tail=new_tail, pos=pos + 1)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            seq_len: int, patches: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prompt processing: last-position logits + a fully primed cache."""
+    hidden, block_caches, tail_caches, enc_out = forward(
+        params, cfg, tokens, patches, frames, cache_size=seq_len)
+    logits = logits_for(params, cfg, hidden[:, -1:])[:, 0]
+    cache: Dict[str, Any] = {
+        "blocks": block_caches,
+        "tail": tail_caches,
+        "pos": jnp.asarray(tokens.shape[1], jnp.int32),
+    }
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+    return logits, cache

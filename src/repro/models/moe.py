@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is group-local: tokens are viewed as (G groups, T/G tokens) with
+G = number of data shards, so the rank-within-expert cumsum never crosses
+a shard boundary (no cross-device scan).  Expert buffers (G, E, C, d) are
+sharded E->model (expert parallelism); the token->expert scatter is where
+GSPMD inserts the all-to-all.
+
+Top-k choices beyond an expert's capacity C = k*T_g/E * capacity_factor
+are dropped (standard capacity dispatch); the residual connection carries
+dropped tokens through unchanged.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import data_shards, shard
+from .common import Params, dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), 0, jnp.float32),
+        "wi_e": dense_init(ks[1], (e, d, f), 1, dtype),
+        "wg_e": dense_init(ks[2], (e, d, f), 1, dtype),
+        "wo_e": dense_init(ks[3], (e, f, d), 1, dtype),
+    }
+
+
+def moe_ffn(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    groups = cfg.moe_groups or data_shards()
+    t = b * s
+    if t % groups != 0:
+        groups = 1
+    tg = t // groups
+    if s == 1:  # decode: tiny token count — dropless (cap covers worst case)
+        cap = tg
+    else:
+        cap = max(1, int(k * tg / e * cfg.capacity_factor))
+        cap = min(cap, tg)
+
+    xt = x.reshape(groups, tg, d)
+    xt = shard(xt, "batch", None, "embed")
+
+    # --- routing (f32 for a stable softmax) ---------------------------
+    logits = xt.astype(jnp.float32) @ params["router"]          # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- rank within expert (group-local, sort-based) ------------------
+    # A one-hot cumsum materializes (G, Tk, E) int32 — 268 GB/chip/layer
+    # at qwen3-moe train_4k scale.  A stable argsort gives identical
+    # first-come-first-served ranks with O(G, Tk) tensors (§Perf).
+    flat_ids = expert_ids.reshape(groups, tg * k)               # (G, Tk)
+    sort_idx = jnp.argsort(flat_ids, axis=1, stable=True)       # (G, Tk)
+    sorted_ids = jnp.take_along_axis(flat_ids, sort_idx, axis=1)
+    first = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(e, dtype=s.dtype)))(
+            sorted_ids)                                         # (G, E)
+    pos = jnp.arange(tg * k, dtype=jnp.int32)[None]
+    rank_sorted = pos - jnp.take_along_axis(first, sorted_ids, axis=1)
+    inv = jnp.argsort(sort_idx, axis=1)                         # inverse perm
+    rank = jnp.take_along_axis(rank_sorted, inv, axis=1)        # (G, Tk)
+    keep = rank < cap
+    # flat slot in the (E*C [+1 overflow]) buffer; dropped -> overflow row
+    slot = jnp.where(keep, flat_ids * cap + rank, e * cap)      # (G, Tk)
+
+    # --- index-based dispatch (§Perf): scatter slot->token INDICES (int32,
+    # a few MB) instead of token VECTORS (Tk x d, k-fold duplicated —
+    # GSPMD turned that scatter into a (Tk, d) f32 all-reduce per layer).
+    # Unused slots point at the zero pad row tg: they gather a zero token,
+    # the (bias-free) experts map it to zero, and it combines into the
+    # discarded pad row with a zero gate.
+    tok_src = jnp.arange(tg * k, dtype=jnp.int32)[None] // k    # (1, Tk)
+    tok_src = jnp.broadcast_to(tok_src, (groups, tg * k))
+
+    def scatter_idx(slots, src):
+        buf = jnp.full((e * cap + 1,), tg, jnp.int32)
+        return buf.at[slots].set(src)[: e * cap]
+
+    idx_buf = jax.vmap(scatter_idx)(slot, tok_src)              # (G, E*C)
+    gates_flat = (gate_vals * keep.reshape(groups, tg, k)).reshape(groups, tg * k)
+
+    def scatter_gate(slots, gvals):
+        buf = jnp.zeros((e * cap + 1,), jnp.float32)
+        return buf.at[slots].set(gvals)[: e * cap]
+
+    gate_buf = jax.vmap(scatter_gate)(slot, gates_flat.astype(jnp.float32))
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((groups, 1, d), xt.dtype)], 1)
+    buf = jnp.take_along_axis(xt_pad, idx_buf[..., None], axis=1)
+    buf = buf.reshape(groups, e, cap, d)
+    buf = shard(buf, "batch", "expert", None, None)
+
+    # --- expert computation (batched over E on the MXU) ---------------
+    h = jnp.einsum("gecd,edf->gecf", buf, params["wi_e"])
+    g_ = jnp.einsum("gecd,edf->gecf", buf, params["wg_e"])
+    h = jax.nn.silu(g_) * h
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo_e"])       # (G, E, C, d)
+    out = shard(out, "batch", "expert", None, None)
+    out = out.reshape(groups, e * cap, d)
+
+    # --- combine: gate-weighted scatter-add back to tokens -------------
+    weighted = out * gate_buf[..., None].astype(out.dtype)      # (G, E*C, d)
+
+    def combine_group(w_g, idx_g):
+        acc = jnp.zeros((tg + 1, d), w_g.dtype)
+        return acc.at[idx_g].add(w_g)[:tg]
+
+    y = jax.vmap(combine_group)(weighted, idx_buf)              # (G, Tg, d)
+    y = y.reshape(b, s, d)
+    return shard(y, "batch", "seq", "embed")
+
+
+def aux_load_balance_loss(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (fraction * prob)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    _, ids = jax.lax.top_k(probs, cfg.n_experts_active)
+    frac = jnp.mean(
+        jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32), axis=(0, 1, 2))
+    return cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))

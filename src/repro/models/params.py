@@ -1,0 +1,98 @@
+"""Logical sharding dims for every parameter leaf, by leaf name.
+
+Convention-based: the leaf's dict key determines its logical axes; extra
+leading dimensions (layer-stacking for scan) map to None.  Anything
+unknown is replicated — safe, and the dry-run memory analysis flags it if
+that ever matters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..distributed.sharding import named_sharding
+
+# leaf name -> logical dims of the UNSTACKED parameter
+LEAF_DIMS = {
+    "tok_embed": ("vocab", "fsdp"),
+    "pos_embed": (None, "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    # attention / mlp projections
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wi": ("fsdp", "tp"), "wg": ("fsdp", "tp"),
+    # row-parallel weights: contraction dim on row_in (default model),
+    # output dim on row_out (default data).  The "colshard" perf variant
+    # flips these so the model axis never holds a contraction dim (kills
+    # the f32-upcast partial-sum all-reduces; see EXPERIMENTS.md §Perf).
+    "wo": ("row_in", "row_out"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    "q_norm": (None,), "k_norm": (None,),
+    # moe
+    "router": ("fsdp", None),
+    "wi_e": ("expert", "fsdp", None), "wg_e": ("expert", "fsdp", None),
+    "wo_e": ("expert", None, "fsdp"),
+    # mamba
+    "in_proj": ("fsdp", "tp"), "out_proj": ("row_in", "row_out"),
+    "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "x_proj": ("tp", None), "dt_w": (None, "tp"), "dt_bias": ("tp",),
+    "A_log": ("tp", None), "D": ("tp",),
+    # rg-lru
+    "w_in": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"),
+    "w_out": ("row_in", "row_out"),
+    "w_r": ("fsdp", "tp"), "w_i": ("fsdp", "tp"),
+    "b_r": ("tp",), "b_i": ("tp",), "Lambda": ("tp",),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+
+def leaf_dims(path, leaf) -> Tuple:
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+    dims = LEAF_DIMS.get(name, tuple(None for _ in leaf.shape))
+    extra = leaf.ndim - len(dims)
+    if extra < 0:  # scalar or reduced leaf
+        return tuple(None for _ in leaf.shape)
+    return tuple([None] * extra) + tuple(dims)
+
+
+def param_shardings(params):
+    """Pytree of NamedShardings (or None outside a mesh context)."""
+    def one(path, leaf):
+        return named_sharding(leaf_dims(path, leaf), leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_dims(path, leaf) -> Tuple:
+    """KV/recurrent cache leaves: batch-sharded, head/feature dims on TP."""
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = entry.key
+            break
+    table = {
+        "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "conv": ("batch", None, "tp"),
+        "ssm": ("batch", "tp", None),
+        "state": ("batch", "tp"),
+        "enc_out": ("batch", None, "embed"),
+        "pos": (),
+    }
+    dims = table.get(name)
+    if dims is None:
+        return tuple(None for _ in leaf.shape)
+    extra = leaf.ndim - len(dims)
+    if extra < 0:
+        return tuple(None for _ in leaf.shape)
+    return tuple([None] * extra) + tuple(dims)
+
+
+def cache_shardings(cache):
+    def one(path, leaf):
+        return named_sharding(cache_dims(path, leaf), leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, cache)

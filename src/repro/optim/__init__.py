@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, apply_updates, global_norm, init_opt_state, schedule
+from .compression import compress_grads, init_error_state

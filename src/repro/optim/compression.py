@@ -1,0 +1,51 @@
+"""Int8 gradient compression with error feedback.
+
+Before the data-parallel all-reduce, gradients are quantized to int8 with
+a per-tensor scale; the quantization error is carried to the next step
+(error feedback), which keeps SGD/Adam convergence unbiased in practice.
+At 1000+ node scale this cuts DP gradient traffic 4x (bf16->int8 would be
+2x; we quantize from the f32 grads, 4x) at the cost of two cheap
+elementwise passes.
+
+Note on mechanics: under GSPMD the all-reduce is implicit (gradients of
+FSDP-sharded params come out of autodiff already reduce-scattered), so we
+expose compression as a *gradient transform* applied inside the train
+step: quantize -> dequantize with error feedback.  The wire-format win is
+realized when the transform is placed around an explicit shard_map psum
+(see launch/train.py --compress-grads); the transform itself is identical.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Returns (dequantized grads as seen by the optimizer, new error)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize(gf)
+        deq = dequantize(q, s)
+        return deq, gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py sets the
+# 512-device flag (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

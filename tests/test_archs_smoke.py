@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke
+from repro.models import lm
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    out = {"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab)}
+    if cfg.vision_patches:
+        out["patches"] = jax.random.normal(
+            jax.random.fold_in(k, 1), (b, cfg.vision_patches, cfg.d_model))
+    if cfg.enc_layers:
+        out["frames"] = jax.random.normal(
+            jax.random.fold_in(k, 2), (b, cfg.enc_seq, cfg.d_model))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = smoke(get_config(arch))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h = lm.forward(params, cfg, batch["tokens"],
+                   patches=batch.get("patches"), frames=batch.get("frames"))
+    assert h.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.isnan(h).any()), arch
+    logits = lm.logits_for(params, cfg, h[:, -1])
+    assert logits.shape == (2, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits).any()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_loss_no_nans(arch):
+    cfg = smoke(get_config(arch))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, o):
+        loss, grads = jax.value_and_grad(
+            lambda q: lm.lm_loss(q, cfg, batch["tokens"],
+                                 patches=batch.get("patches"),
+                                 frames=batch.get("frames")))(p)
+        p, o = apply_updates(opt_cfg, p, grads, o)
+        return loss, p, o
+
+    losses = []
+    for _ in range(3):
+        loss, params, opt = step(params, opt)
+        assert not bool(jnp.isnan(loss)), arch
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = smoke(get_config(arch)).with_(dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg, s=24)
+    toks = b["tokens"]
+    _, cache = lm.prefill(params, cfg, toks[:, :12], seq_len=24,
+                          patches=b.get("patches"), frames=b.get("frames"))
+    ld, cache = lm.decode_step(params, cfg, cache, toks[:, 12])
+    h = lm.forward(params, cfg, toks[:, :13],
+                   patches=b.get("patches"), frames=b.get("frames"))
+    ref = lm.logits_for(params, cfg, h[:, 12])
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_exact_configs_match_brief():
+    """Guard: the full configs carry the exact dims from the assignment."""
+    c = get_config("qwen3-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (64, 5120, 64, 8, 25600, 151936)
+    c = get_config("gemma2-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (26, 2304, 8, 4, 9216, 256000)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm_state) == (64, 4096, 65024, 16)
+    c = get_config("qwen3-moe-30b-a3b")
+    assert (c.n_experts, c.n_experts_active, c.d_ff) == (128, 8, 768)
+    c = get_config("moonshot-v1-16b-a3b")
+    assert (c.n_experts, c.n_experts_active, c.vocab) == (64, 6, 163840)
+    c = get_config("internvl2-26b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (48, 6144, 48, 8)
+    c = get_config("recurrentgemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (26, 2560, 10, 1)
+    c = get_config("whisper-tiny")
+    assert (c.n_layers, c.enc_layers, c.d_model, c.vocab) == (4, 4, 384, 51865)
+    c = get_config("mistral-nemo-12b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (40, 5120, 14336, 131072)
+    c = get_config("qwen1.5-0.5b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.qkv_bias) == (24, 1024, 2816, True)

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypercolumns import LayerGeom, encode_scalar_hcs, hc_softmax
+from repro.core.traces import Traces, init_traces, update_traces, weights_from_traces
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.optim.compression import compress_grads, init_error_state
+from repro.data.pipeline import batch_indices
+
+COMMON = dict(deadline=None, max_examples=20)
+
+
+@settings(**COMMON)
+@given(b=st.integers(1, 16), h=st.integers(1, 8), m=st.integers(2, 16),
+       scale=st.floats(0.1, 20.0))
+def test_hc_softmax_is_distribution(b, h, m, scale):
+    key = jax.random.PRNGKey(b * 1000 + h * 100 + m)
+    geom = LayerGeom(h, m)
+    s = jax.random.normal(key, (b, h * m)) * scale
+    out = np.asarray(hc_softmax(s, geom)).reshape(b, h, m)
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-4)
+    assert (out >= 0).all()
+
+
+@settings(**COMMON)
+@given(steps=st.integers(1, 30), alpha=st.floats(1e-4, 0.5),
+       seed=st.integers(0, 100))
+def test_traces_stay_probabilities(steps, alpha, seed):
+    """p traces remain in [0,1] and p_ij <= min-ish marginals under any
+    stream of valid rate inputs."""
+    key = jax.random.PRNGKey(seed)
+    tr = init_traces(8, 6, 2, 3, key=key)
+    for i in range(steps):
+        k1, k2, key = jax.random.split(key, 3)
+        x = jax.random.dirichlet(k1, jnp.ones(2), (4, 4)).reshape(4, 8)
+        y = jax.random.dirichlet(k2, jnp.ones(3), (4, 2)).reshape(4, 6)
+        tr = update_traces(tr, x, y, alpha)
+    pi, pj, pij = np.asarray(tr.pi), np.asarray(tr.pj), np.asarray(tr.pij)
+    assert (pi >= 0).all() and (pi <= 1 + 1e-6).all()
+    assert (pj >= 0).all() and (pj <= 1 + 1e-6).all()
+    assert (pij >= 0).all() and (pij <= 1 + 1e-6).all()
+    # marginal consistency: sum over MC pairs within (HC_i, HC_j) ~ 1
+    blocked = pij.reshape(4, 2, 2, 3)
+    np.testing.assert_allclose(blocked.sum((1, 3)), 1.0, atol=1e-3)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 1000))
+def test_weights_zero_iff_independent(seed):
+    """If p_ij == p_i p_j exactly, weights must be ~0 (no spurious info)."""
+    rng = np.random.default_rng(seed)
+    pi = rng.uniform(0.2, 0.8, 6).astype(np.float32)
+    pj = rng.uniform(0.2, 0.8, 4).astype(np.float32)
+    tr = Traces(pi=jnp.asarray(pi), pj=jnp.asarray(pj),
+                pij=jnp.asarray(np.outer(pi, pj)), t=jnp.asarray(5))
+    w, b = weights_from_traces(tr)
+    np.testing.assert_allclose(np.asarray(w), 0.0, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(f=st.integers(1, 32), b=st.integers(1, 8), seed=st.integers(0, 99))
+def test_scalar_encoding_is_valid_hc_activity(f, b, seed):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (b, f))
+    enc = np.asarray(encode_scalar_hcs(x)).reshape(b, f, 2)
+    np.testing.assert_allclose(enc.sum(-1), 1.0, atol=1e-6)
+
+
+@settings(**COMMON)
+@given(n=st.integers(64, 4096), batch=st.integers(1, 64),
+       step=st.integers(0, 500), seed=st.integers(0, 10))
+def test_data_pipeline_deterministic_and_seekable(n, batch, step, seed):
+    batch = min(batch, n)
+    a = batch_indices(n, batch, step, seed)
+    b = batch_indices(n, batch, step, seed)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == batch and a.max() < n
+    # within an epoch, batches partition the data (no repeats)
+    steps_per_epoch = n // batch
+    if steps_per_epoch >= 2:
+        e0 = batch_indices(n, batch, (step // steps_per_epoch) * steps_per_epoch,
+                           seed)
+        e1 = batch_indices(n, batch,
+                           (step // steps_per_epoch) * steps_per_epoch + 1, seed)
+        assert len(np.intersect1d(e0, e1)) == 0
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 100), lr=st.floats(1e-5, 1e-2))
+def test_adamw_moves_params_finite(seed, lr):
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (8, 8)),
+              "b": jnp.zeros((8,))}
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=lr, warmup_steps=1, total_steps=100)
+    new, opt = apply_updates(cfg, params, grads, opt)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+        assert np.isfinite(np.asarray(a)).all()
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 100))
+def test_grad_compression_error_feedback_bounded(seed):
+    """Quantize->dequantize with error feedback: per-step error is bounded
+    by one quantization bucket and the carried error never explodes."""
+    key = jax.random.PRNGKey(seed)
+    grads = {"w": jax.random.normal(key, (64,)) * 3.0}
+    err = init_error_state(grads)
+    for _ in range(5):
+        deq, err = compress_grads(grads, err)
+        scale = float(jnp.max(jnp.abs(grads["w"]) + jnp.abs(err["w"]))) / 127.0
+        assert float(jnp.abs(err["w"]).max()) <= scale + 1e-6
