@@ -1,5 +1,6 @@
 """Paper Table 2 analogue: per-image latency + derived energy model for the
-three BCPNN models x {infer, train, train+struct}.
+three BCPNN models x {infer, train, train+struct}, plus a deep-stack row
+(the multi-layer protocol of DESIGN.md §1).
 
 This container is CPU-only, so wall-clock numbers characterize the CPU
 baseline column of Table 2; the TPU-side performance is projected from the
@@ -14,14 +15,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.bcpnn_models import BCPNN_MODELS
-from repro.core import (BCPNNConfig, eval_batches, infer, init_network,
-                        supervised_epoch, unsupervised_epoch)
+from repro.configs.bcpnn_models import BCPNN_MODELS, deep_synth_spec
+from repro.core import (as_spec, eval_batches, infer, init_deep,
+                        supervised_epoch, unsupervised_layer_epoch)
 from repro.data.synthetic import encode_images, load_or_synthesize
 
 
-def bench_model(name: str, cfg: BCPNNConfig, dataset: str, batch: int = 128,
+def bench_model(name: str, cfg, dataset: str, batch: int = 128,
                 subset: int = 2048, bench_steps: int = 20):
+    """cfg: BCPNNConfig or NetworkSpec — both drive the same engine."""
+    spec = as_spec(cfg)
     ds = load_or_synthesize(dataset)
     x = encode_images(ds.x_train[:subset])
     y = ds.y_train[:subset].astype(np.int32)
@@ -29,20 +32,22 @@ def bench_model(name: str, cfg: BCPNNConfig, dataset: str, batch: int = 128,
     xs = jnp.asarray(x[: nb * batch].reshape(nb, batch, -1))
     ys = jnp.asarray(y[: nb * batch].reshape(nb, batch))
 
-    state = init_network(cfg, jax.random.PRNGKey(0))
-    # --- train latency (one unsupervised epoch, steady-state) ----------
-    state = unsupervised_epoch(state, cfg, xs)           # warm-up/compile
-    jax.block_until_ready(state.ih.w)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    # --- train latency (one unsupervised epoch per layer, steady-state) --
+    for layer in range(spec.depth):                      # warm-up/compile
+        state = unsupervised_layer_epoch(state, spec, xs, layer)
+    jax.block_until_ready(state.projs[-1].w)
     t0 = time.perf_counter()
-    state = unsupervised_epoch(state, cfg, xs)
-    jax.block_until_ready(state.ih.w)
-    train_ms_img = (time.perf_counter() - t0) / (nb * batch) * 1e3
+    for layer in range(spec.depth):
+        state = unsupervised_layer_epoch(state, spec, xs, layer)
+    jax.block_until_ready(state.projs[-1].w)
+    train_ms_img = (time.perf_counter() - t0) / (nb * batch * spec.depth) * 1e3
 
-    state = supervised_epoch(state, cfg, xs, ys)
-    jax.block_until_ready(state.ho.w)
+    state = supervised_epoch(state, spec, xs, ys)
+    jax.block_until_ready(state.readout.w)
 
     # --- inference latency ---------------------------------------------
-    infer_j = jax.jit(lambda s, xb: infer(s, cfg, xb)[1])
+    infer_j = jax.jit(lambda s, xb: infer(s, spec, xb)[1])
     pred = infer_j(state, xs[0])
     jax.block_until_ready(pred)
     t0 = time.perf_counter()
@@ -51,9 +56,10 @@ def bench_model(name: str, cfg: BCPNNConfig, dataset: str, batch: int = 128,
     jax.block_until_ready(pred)
     infer_ms_img = (time.perf_counter() - t0) / (bench_steps * batch) * 1e3
 
-    acc = float(eval_batches(state, cfg, xs, ys))
+    acc = float(eval_batches(state, spec, xs, ys))
     return {
         "name": name,
+        "depth": spec.depth,
         "train_ms_per_img": train_ms_img,
         "infer_ms_per_img": infer_ms_img,
         "train_acc": acc,
@@ -61,10 +67,16 @@ def bench_model(name: str, cfg: BCPNNConfig, dataset: str, batch: int = 128,
 
 
 def run(csv=True):
+    jobs = [(name, cfg, dataset)
+            for name, (cfg, dataset, _epochs) in BCPNN_MODELS.items()
+            if not name.endswith("-struct")]  # struct benched in bench_struct
+    # deep-stack row: 2 hidden layers on the MNIST-shaped surrogate
+    jobs.append(("deep2-synth",
+                 deep_synth_spec(side=28, depth=2, n_classes=10,
+                                 hidden_hc=32, hidden_mc=64, alpha=2e-3),
+                 "mnist"))
     rows = []
-    for name, (cfg, dataset, _epochs) in BCPNN_MODELS.items():
-        if name.endswith("-struct"):
-            continue  # struct variants benched in bench_struct
+    for name, cfg, dataset in jobs:
         r = bench_model(name, cfg, dataset)
         rows.append(r)
         if csv:

@@ -1,24 +1,33 @@
 """Paper §4.1 analogue: sequential (unfused, every intermediate in HBM)
-vs stream-dataflow (fused Pallas kernels) BCPNN step.
+vs stream-dataflow (fused) BCPNN step — now swept over network depth
+(1-3 hidden layers) x execution backend (jnp reference vs fused Pallas).
 
 On CPU, the Pallas interpreter adds Python overhead per tile, so the
 honest CPU-side comparison is between the unfused jnp stages and the
 FUSION-EQUIVALENT jnp composition (XLA fuses within one jit, mirroring
-what the Pallas kernel does structurally on TPU).  We also report the
-Pallas-interpret timing for completeness, and — the number that matters
-for the TPU target — the HBM-traffic model for both schedules
-(the paper's Opt#1+#2 ~70% claim is a traffic claim).
+what the Pallas kernel does structurally on TPU).  We still run the
+Pallas-dispatch path for completeness — on TPU the same calls compile to
+Mosaic and it becomes the production number — and report the HBM-traffic
+model for both schedules (the paper's Opt#1+#2 ~70% claim is a traffic
+claim).
+
+Output: ``name,value,unit`` CSV rows for the table harness, plus one
+machine-readable JSON summary line (``stream_vs_seq_json={...}``) and an
+optional ``--json PATH`` dump for the bench trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import (
+    LayerGeom, infer, init_deep, make_network_spec, unsupervised_layer_step,
+)
 from repro.core.bcpnn_layer import ProjSpec, forward, init_projection, learn
-from repro.core.hypercolumns import LayerGeom
-from repro.kernels import fused_forward, fused_learn
 
 
 def _time(fn, *args, iters=10):
@@ -50,7 +59,8 @@ def hbm_traffic_model(b, ni, nj):
     return 4 * sum(seq.values()), 4 * sum(fused.values())
 
 
-def run(csv=True):
+def single_projection_comparison(csv=True):
+    """The original §4.1 microbenchmark: one projection, three schedules."""
     b, hi, mi, hj, mj = 256, 512, 2, 16, 128
     spec = ProjSpec(LayerGeom(hi, mi), LayerGeom(hj, mj), alpha=1e-2)
     proj = init_projection(spec, jax.random.PRNGKey(0))
@@ -70,19 +80,91 @@ def run(csv=True):
         h = forward(p, spec, xb)
         return learn(p, spec, xb, h)
 
+    # pallas dispatch: the production path (Mosaic on TPU; interpret here)
+    pspec = spec.with_backend("pallas")
+
+    @jax.jit
+    def pallas_step(p, xb):
+        h = forward(p, pspec, xb)
+        return learn(p, pspec, xb, h)
+
     t_seq = _time(seq_step, proj, x)
     t_stream = _time(stream_step, proj, x)
+    t_pallas = _time(pallas_step, proj, x, iters=3)
     seq_bytes, fused_bytes = hbm_traffic_model(b, spec.pre.N, spec.post.N)
     if csv:
         print(f"stream_vs_seq,{t_seq*1e6:.0f},sequential_us")
         print(f"stream_vs_seq,{t_stream*1e6:.0f},stream_fused_us")
+        print(f"stream_vs_seq,{t_pallas*1e6:.0f},pallas_dispatch_us")
         print(f"stream_vs_seq,{(t_seq/t_stream-1)*100:.0f},speedup_pct")
         print(f"stream_vs_seq,{seq_bytes/1e6:.1f},seq_traffic_MB")
         print(f"stream_vs_seq,{fused_bytes/1e6:.1f},fused_traffic_MB")
         print(f"stream_vs_seq,{(seq_bytes/fused_bytes-1)*100:.0f},traffic_reduction_pct")
-    return {"t_seq": t_seq, "t_stream": t_stream,
+    return {"t_seq": t_seq, "t_stream": t_stream, "t_pallas": t_pallas,
             "seq_bytes": seq_bytes, "fused_bytes": fused_bytes}
 
 
+def depth_backend_sweep(depths=(1, 2, 3), backends=("jnp", "pallas"),
+                        csv=True):
+    """Train-step + infer-step latency for a deep stack, per backend.
+
+    The timed train step is the protocol's steady-state hot path:
+    unsupervised plasticity on the TOP projection, which streams the batch
+    through all frozen lower layers first — so cost grows with depth.
+    """
+    b, side = 128, 12
+    results = []
+    for depth in depths:
+        for backend in backends:
+            spec = make_network_spec(
+                LayerGeom(side * side, 2), [(16, 32)] * depth, n_classes=5,
+                alpha=1e-2, backend=backend, support_noise=2.0,
+                noise_steps=100)
+            state = init_deep(spec, jax.random.PRNGKey(0))
+            x = jax.random.uniform(jax.random.PRNGKey(1),
+                                   (b, spec.input_geom.N))
+            train = jax.jit(lambda s, xb, _spec=spec: unsupervised_layer_step(
+                s, _spec, xb, _spec.depth - 1))
+            inf = jax.jit(lambda s, xb, _spec=spec: infer(s, _spec, xb)[1])
+            iters = 10 if backend == "jnp" else 3
+            t_train = _time(train, state, x, iters=iters)
+            t_infer = _time(inf, state, x, iters=iters)
+            row = {
+                "depth": depth,
+                "backend": backend,
+                "train_us_per_batch": t_train * 1e6,
+                "infer_us_per_batch": t_infer * 1e6,
+                "train_us_per_img": t_train / b * 1e6,
+                "infer_us_per_img": t_infer / b * 1e6,
+            }
+            results.append(row)
+            if csv:
+                print(f"stream_vs_seq_d{depth}_{backend},"
+                      f"{row['train_us_per_img']:.1f},train_us_per_img")
+                print(f"stream_vs_seq_d{depth}_{backend},"
+                      f"{row['infer_us_per_img']:.1f},infer_us_per_img")
+    return results
+
+
+def run(csv=True, json_path=None):
+    single = single_projection_comparison(csv=csv)
+    sweep = depth_backend_sweep(csv=csv)
+    summary = {
+        "single_projection": single,
+        "depth_backend_sweep": sweep,
+        "device": jax.default_backend(),
+    }
+    if csv:
+        print("stream_vs_seq_json=" + json.dumps(summary))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+    return summary
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write the JSON summary to this path")
+    args = ap.parse_args()
+    run(json_path=args.json)

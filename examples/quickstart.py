@@ -1,10 +1,14 @@
-"""Quickstart: train the paper's Model-1 BCPNN (MNIST-shaped) end to end.
+"""Quickstart: train a BCPNN (MNIST-shaped) end to end, at any depth.
 
     PYTHONPATH=src python examples/quickstart.py [--small]
+    PYTHONPATH=src python examples/quickstart.py --depth 2 --backend pallas
 
-Runs the full protocol of the paper's §5: unsupervised epochs on the
-input-hidden projection, one supervised pass on the readout, then
-inference — and reports per-image latencies and accuracy like Table 2.
+Runs the full protocol of the paper's §5, generalized to arbitrary-depth
+stacks (DESIGN.md §1): layerwise unsupervised epochs on each stack
+projection, one supervised pass on the readout, then inference — and
+reports per-image latencies and accuracy like Table 2.  ``--backend
+pallas`` routes every projection through the fused stream-dataflow
+kernels (Mosaic on TPU, interpret mode here).
 (Offline container: data is a class-structured synthetic surrogate with
 MNIST's shapes; drop a real mnist.npz under data/ to use actual MNIST.)
 """
@@ -14,7 +18,9 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.configs.bcpnn_models import MODEL1_MNIST
+import dataclasses
+
+from repro.configs.bcpnn_models import MODEL1_MNIST, deep_mnist_spec
 from repro.core import Trainer
 from repro.data.synthetic import encode_images, load_or_synthesize
 
@@ -23,24 +29,37 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
                     help="subset + fewer epochs (CI-speed)")
+    ap.add_argument("--depth", type=int, default=1,
+                    help="number of hidden layers (1 = the paper's Model 1)")
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+                    help="execution backend for every projection")
     args = ap.parse_args()
 
     ds = load_or_synthesize("mnist")
     n_train = 4096 if args.small else 16384
     epochs = 3 if args.small else 5
-    cfg = MODEL1_MNIST
-    if args.small:
-        cfg = cfg.__class__(**{**cfg.__dict__, "hidden_mc": 64,
-                               "noise_steps": 60})
+
+    if args.depth == 1:
+        cfg = MODEL1_MNIST
+        if args.small:
+            cfg = dataclasses.replace(cfg, hidden_mc=64, noise_steps=60)
+        spec = dataclasses.replace(cfg, backend=args.backend).network_spec()
+        desc = f"input 784x2, hidden {cfg.hidden_hc}x{cfg.hidden_mc}"
+    else:
+        spec = deep_mnist_spec(
+            depth=args.depth, backend=args.backend,
+            hidden_mc=32 if args.small else 64)
+        desc = " -> ".join(f"{p.post.H}x{p.post.M}" for p in spec.projs)
+        desc = f"input 784x2, hidden {desc}"
 
     xt = encode_images(ds.x_train[:n_train])
     yt = ds.y_train[:n_train]
     xe = encode_images(ds.x_test[:2048])
     ye = ds.y_test[:2048]
 
-    print(f"[quickstart] model1-mnist: input 784x2, hidden "
-          f"{cfg.hidden_hc}x{cfg.hidden_mc}, {epochs} unsupervised epochs")
-    tr = Trainer(cfg, seed=0)
+    print(f"[quickstart] depth={args.depth} backend={args.backend}: {desc}, "
+          f"{epochs} unsupervised epochs/layer")
+    tr = Trainer(spec, seed=0)
     t0 = time.time()
     stats = tr.fit(xt, yt, epochs=epochs, batch=128, log=True)
     acc_train = tr.evaluate(xt, yt)
@@ -49,7 +68,12 @@ def main():
           f"train latency {stats['train_ms_per_img']:.3f} ms/img")
     print(f"[quickstart] train acc {acc_train*100:.1f}%  "
           f"test acc {acc_test*100:.1f}%")
-    assert acc_test > 0.85, "quickstart should learn the surrogate task"
+    # The 0.85 bar is calibrated to the paper's depth-1 Model 1; greedy
+    # deep stacks trade accuracy on this small surrogate for the layered
+    # representation, so deeper runs only have to beat chance clearly.
+    floor = 0.85 if args.depth == 1 else 0.5
+    assert acc_test > floor, \
+        f"quickstart should learn the surrogate task ({acc_test:.3f} <= {floor})"
 
 
 if __name__ == "__main__":

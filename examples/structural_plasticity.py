@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BCPNNConfig, init_network, mutual_information, unsupervised_step
+from repro.core import (
+    BCPNNConfig, init_deep, mutual_information, unsupervised_layer_step,
+)
 from repro.data.synthetic import encode_images, load_or_synthesize
 
 
@@ -30,19 +32,21 @@ def main():
                       hidden_mc=32, n_classes=10, nact_hi=196, alpha=5e-3,
                       support_noise=3.0, noise_steps=200, struct_every=16)
     x = encode_images(ds.x_train[:8192])
-    state = init_network(cfg, jax.random.PRNGKey(0))
-    step = jax.jit(lambda s, xb: unsupervised_step(s, cfg, xb))
+    spec = cfg.network_spec()
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    step = jax.jit(lambda s, xb: unsupervised_layer_step(s, spec, xb, 0))
 
     snapshots, mi_curve = [], []
     for i in range(0, 8192 * 3, 128):
         xb = jnp.asarray(x[(i % 8192):(i % 8192) + 128])
         state = step(state, xb)
         if (i // 128) % 48 == 0:
-            mi = mutual_information(state.ih.traces, side * side, 2,
+            proj = state.projs[0]
+            mi = mutual_information(proj.traces, side * side, 2,
                                     cfg.hidden_hc, cfg.hidden_mc)
-            captured = float(jnp.sum(mi * state.ih.mask))
+            captured = float(jnp.sum(mi * proj.mask))
             mi_curve.append(captured)
-            snapshots.append(np.asarray(state.ih.mask[:, 0]))
+            snapshots.append(np.asarray(proj.mask[:, 0]))
 
     print("[struct] receptive field of hidden HC 0, early vs late:")
     print(render_rf(snapshots[0], side))

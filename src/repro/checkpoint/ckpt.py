@@ -27,10 +27,18 @@ import jax
 import numpy as np
 
 
+def _key_str(k) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (registered
+    # dataclasses like DeepState/Projection/Traces) -> .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def _flatten_with_names(tree: Any):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-             for path, _ in flat]
+    names = ["/".join(_key_str(k) for k in path) for path, _ in flat]
     return names, [leaf for _, leaf in flat], treedef
 
 
@@ -109,12 +117,35 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step}")
         arrays = np.load(os.path.join(path, "arrays.npz"))
         names, leaves, treedef = _flatten_with_names(target)
-        shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
-                        else [None] * len(leaves))
+        if shardings is not None:
+            shard_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: x is None)
+            if len(shard_leaves) != len(leaves):
+                raise ValueError(
+                    f"shardings tree has {len(shard_leaves)} leaves for "
+                    f"{len(leaves)} target leaves")
+        else:
+            shard_leaves = [None] * len(leaves)
+        missing = sorted(set(names) - set(arrays.files))
+        extra = sorted(set(arrays.files) - set(names))
+        if missing or extra:
+            def _fmt(kind, items):
+                return (f"{kind} leaves {items[:5]}"
+                        + (f" ... +{len(items) - 5} more"
+                           if len(items) > 5 else ""))
+            detail = "; ".join(_fmt(k, v) for k, v in
+                               (("missing", missing), ("extra", extra)) if v)
+            raise ValueError(
+                f"checkpoint step_{step} does not match the target "
+                f"structure (e.g. a different network depth/geometry): "
+                f"{detail}")
         out = []
         for name, ref, shd in zip(names, leaves, shard_leaves):
             a = arrays[name]
-            assert tuple(a.shape) == tuple(ref.shape), (name, a.shape, ref.shape)
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint leaf {name!r} has shape {tuple(a.shape)}, "
+                    f"target expects {tuple(ref.shape)}")
             a = jax.numpy.asarray(a).astype(ref.dtype)
             out.append(jax.device_put(a, shd) if shd is not None else a)
         return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,7 +1,13 @@
-"""The paper's three BCPNN model configurations (Table 1)."""
+"""BCPNN model zoo: the paper's three Table-1 configurations (thin
+depth-1 presets) plus deep multi-layer presets for the stacked protocol
+(DESIGN.md §1) with per-network backend variants."""
 from __future__ import annotations
 
-from ..core.network import BCPNNConfig
+import dataclasses
+from typing import Optional, Sequence
+
+from ..core.hypercolumns import LayerGeom
+from ..core.network import BCPNNConfig, NetworkSpec, make_network_spec
 
 # nactHi = 128 (Table 1) prescribes the receptive-field sparsity; the
 # fields are FOUND by structural plasticity (Fig. 5).  Without structural
@@ -31,12 +37,12 @@ MODEL3_BREAST = BCPNNConfig(
 )
 
 # Structural-plasticity variants (paper's "struct" rows): nactHi=128
-MODEL1_MNIST_STRUCT = MODEL1_MNIST.__class__(
-    **{**MODEL1_MNIST.__dict__, "struct_every": 64, "nact_hi": 128})
-MODEL2_PNEUMONIA_STRUCT = MODEL2_PNEUMONIA.__class__(
-    **{**MODEL2_PNEUMONIA.__dict__, "struct_every": 16, "nact_hi": 128})
-MODEL3_BREAST_STRUCT = MODEL3_BREAST.__class__(
-    **{**MODEL3_BREAST.__dict__, "struct_every": 8, "nact_hi": 128})
+MODEL1_MNIST_STRUCT = dataclasses.replace(
+    MODEL1_MNIST, struct_every=64, nact_hi=128)
+MODEL2_PNEUMONIA_STRUCT = dataclasses.replace(
+    MODEL2_PNEUMONIA, struct_every=16, nact_hi=128)
+MODEL3_BREAST_STRUCT = dataclasses.replace(
+    MODEL3_BREAST, struct_every=8, nact_hi=128)
 
 BCPNN_MODELS = {
     "model1-mnist": (MODEL1_MNIST, "mnist", 5),
@@ -46,3 +52,37 @@ BCPNN_MODELS = {
     "model2-pneumonia-struct": (MODEL2_PNEUMONIA_STRUCT, "pneumonia", 20),
     "model3-breast-struct": (MODEL3_BREAST_STRUCT, "breast", 100),
 }
+
+
+# ----------------------------------------------------------- deep presets --
+
+def deep_mnist_spec(depth: int = 2, backend: str = "jnp",
+                    hidden_hc: int = 32, hidden_mc: int = 64) -> NetworkSpec:
+    """MNIST-shaped deep stack: 784x2 input, ``depth`` hidden layers of
+    hidden_hc x hidden_mc, 10-way readout.  Upper layers get a shorter
+    noise anneal: they see already-structured rates and need less
+    symmetry breaking."""
+    hidden = [LayerGeom(hidden_hc, hidden_mc)] * depth
+    spec = make_network_spec(
+        LayerGeom(28 * 28, 2), hidden, n_classes=10, alpha=2e-3,
+        backend=backend, support_noise=3.0, noise_steps=1500,
+    )
+    projs = tuple(
+        p if l == 0 else dataclasses.replace(p, noise_steps=500)
+        for l, p in enumerate(spec.projs)
+    )
+    return NetworkSpec(projs=projs, readout=spec.readout)
+
+
+def deep_synth_spec(side: int = 12, depth: int = 2, n_classes: int = 5,
+                    backend: str = "jnp", hidden_hc: int = 16,
+                    hidden_mc: int = 32,
+                    nact: Optional[Sequence[Optional[int]]] = None,
+                    alpha: float = 1e-2) -> NetworkSpec:
+    """Deep stack sized for the synthetic surrogate datasets (tests, CI,
+    benchmarks): side*side*2 input, ``depth`` hidden layers."""
+    hidden = [LayerGeom(hidden_hc, hidden_mc)] * depth
+    return make_network_spec(
+        LayerGeom(side * side, 2), hidden, n_classes=n_classes, alpha=alpha,
+        nact=nact, backend=backend, support_noise=3.0, noise_steps=200,
+    )

@@ -1,17 +1,32 @@
 """BCPNN core — the paper's contribution as composable JAX modules."""
 from .hypercolumns import LayerGeom, encode_scalar_hcs, hc_hardmax, hc_softmax
 from .traces import Traces, init_traces, mutual_information, update_traces, weights_from_traces
-from .bcpnn_layer import Projection, ProjSpec, forward, init_projection, learn, rewire, support
+from .bcpnn_layer import (
+    BACKENDS, Projection, ProjSpec, forward, init_projection, learn,
+    normalize, rewire, support,
+)
 from .network import (
     BCPNNConfig,
     BCPNNState,
+    DeepState,
+    NetworkSpec,
+    as_spec,
     hidden_rates,
     infer,
+    init_deep,
     init_network,
+    make_network_spec,
+    stack_rates,
+    supervised_readout_step,
     supervised_step,
+    train_projection_step,
+    unsupervised_layer_step,
     unsupervised_step,
 )
-from .trainer import Trainer, eval_batches, supervised_epoch, unsupervised_epoch
+from .trainer import (
+    Trainer, eval_batches, supervised_epoch, unsupervised_epoch,
+    unsupervised_layer_epoch,
+)
 from .head import (
     BCPNNHeadConfig,
     encode_features,
@@ -24,10 +39,14 @@ from .head import (
 __all__ = [
     "LayerGeom", "encode_scalar_hcs", "hc_hardmax", "hc_softmax",
     "Traces", "init_traces", "mutual_information", "update_traces", "weights_from_traces",
-    "Projection", "ProjSpec", "forward", "init_projection", "learn", "rewire", "support",
-    "BCPNNConfig", "BCPNNState", "hidden_rates", "infer", "init_network",
-    "supervised_step", "unsupervised_step",
+    "BACKENDS", "Projection", "ProjSpec", "forward", "init_projection",
+    "learn", "normalize", "rewire", "support",
+    "BCPNNConfig", "BCPNNState", "DeepState", "NetworkSpec", "as_spec",
+    "hidden_rates", "infer", "init_deep", "init_network", "make_network_spec",
+    "stack_rates", "supervised_readout_step", "supervised_step",
+    "train_projection_step", "unsupervised_layer_step", "unsupervised_step",
     "Trainer", "eval_batches", "supervised_epoch", "unsupervised_epoch",
+    "unsupervised_layer_epoch",
     "BCPNNHeadConfig", "encode_features", "head_predict", "head_supervised",
     "head_unsupervised", "init_head",
 ]

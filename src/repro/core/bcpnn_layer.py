@@ -3,8 +3,19 @@ two hypercolumnar populations, plus its probability traces.
 
 This is the unit of work the paper's accelerator streams: activation
 (support matmul + HC softmax) and plasticity (trace EMA + log-weight
-recompute).  Both stages have fused Pallas kernels in kernels/; the
-methods here are the pure-jnp reference path, selected by ``use_pallas``.
+recompute).  Each projection carries a ``backend`` tag in its spec:
+
+  * ``"jnp"``    — the pure-jnp reference path implemented in this module
+                   (XLA fuses it within one jit; the "sequential" baseline
+                   of the paper's §4.1 comparison);
+  * ``"pallas"`` — the fused stream-dataflow kernels in ``kernels/``
+                   (Mosaic on TPU, interpret mode elsewhere), the
+                   production hot path.
+
+``forward`` / ``support`` / ``learn`` below are the single dispatch
+point: every caller (the deep network engine, the trainer, benchmarks)
+routes through them, so flipping ``ProjSpec.backend`` swaps the whole
+execution stack per projection.  See DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -17,10 +28,18 @@ import jax.numpy as jnp
 from .hypercolumns import LayerGeom, hc_softmax
 from .traces import Traces, init_traces, mutual_information, update_traces, weights_from_traces
 
+BACKENDS = ("jnp", "pallas")
+
 
 @dataclasses.dataclass(frozen=True)
 class ProjSpec:
-    """Static configuration of a projection."""
+    """Static configuration of a projection.
+
+    The trailing fields are per-projection training knobs used by the
+    deep engine (core/network.py): exploration noise on the post support
+    during unsupervised learning (annealed over ``noise_steps`` trace
+    updates) and the structural-plasticity rewire period.
+    """
 
     pre: LayerGeom
     post: LayerGeom
@@ -28,6 +47,18 @@ class ProjSpec:
     eps: float = 1e-4          # probability floor
     gain: float = 1.0          # softmax gain on support
     nact: Optional[int] = None  # active pre-HCs per post-HC (None = dense)
+    backend: str = "jnp"       # "jnp" reference | "pallas" fused kernels
+    support_noise: float = 0.0  # exploration noise amplitude (unsup. only)
+    noise_steps: int = 0       # anneal horizon in trace updates
+    struct_every: int = 0      # rewire period in trace updates (0 = off)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+
+    def with_backend(self, backend: str) -> "ProjSpec":
+        return dataclasses.replace(self, backend=backend)
 
 
 @jax.tree_util.register_dataclass
@@ -67,19 +98,53 @@ def init_projection(spec: ProjSpec, key: jax.Array) -> Projection:
     return Projection(traces=tr, w=w, b=b, mask=mask)
 
 
+# ------------------------------------------------------------- dispatch --
+
+def _pallas_ops():
+    # Imported lazily: kernels.ops imports this module for the pytree
+    # types, so the dependency must point one way at import time.
+    from ..kernels import ops
+    return ops
+
+
 def forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
     """Activation stage: rates -> post-synaptic rates.   x: (B, Ni)."""
-    support = proj.b[None, :] + x @ proj.w
-    return hc_softmax(support, spec.post, spec.gain)
+    if spec.backend == "pallas":
+        return _pallas_ops().fused_forward(proj, spec, x)
+    return _forward_jnp(proj, spec, x)
 
 
 def support(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
-    """Log-domain support only (used by readout/inference paths)."""
+    """Log-domain support only (used by readout/inference and the noisy
+    unsupervised path).  A bare matmul has no fusion epilogue to win, so
+    both backends share the jnp implementation; it is kept behind the
+    dispatch point so a future support-only kernel slots in here."""
     return proj.b[None, :] + x @ proj.w
+
+
+def normalize(support_vals: jax.Array, spec: ProjSpec) -> jax.Array:
+    """Divisive normalization of a post-population support matrix."""
+    if spec.backend == "pallas":
+        return _pallas_ops().hc_softmax(
+            support_vals, spec.post.H, spec.post.M, spec.gain)
+    return hc_softmax(support_vals, spec.post, spec.gain)
 
 
 def learn(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Projection:
     """Plasticity stage: one streaming batch update of traces + weights."""
+    if spec.backend == "pallas":
+        return _pallas_ops().fused_learn(proj, spec, x, y)
+    return _learn_jnp(proj, spec, x, y)
+
+
+# ------------------------------------------------------ jnp reference ----
+
+def _forward_jnp(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
+    s = proj.b[None, :] + x @ proj.w
+    return hc_softmax(s, spec.post, spec.gain)
+
+
+def _learn_jnp(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Projection:
     tr = update_traces(proj.traces, x, y, spec.alpha)
     w, b = weights_from_traces(tr, spec.eps)
     w = w * _expand_mask(proj.mask, spec)
@@ -89,7 +154,9 @@ def learn(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Proje
 def rewire(proj: Projection, spec: ProjSpec) -> Projection:
     """Structural plasticity: keep the top-nact highest-MI pre-HCs per
     post-HC.  Fully on-device (beyond-paper: the paper did this on the host
-    and paid a measured total-time penalty on small datasets)."""
+    and paid a measured total-time penalty on small datasets).  Cold path:
+    runs every ``struct_every`` steps, so it stays pure jnp on both
+    backends."""
     if spec.nact is None or spec.nact >= spec.pre.H:
         return proj
     mi = mutual_information(

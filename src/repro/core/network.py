@@ -1,31 +1,270 @@
-"""The paper's three-population network: input -> hidden -> output.
+"""Deep BCPNN: arbitrary-depth projection stacks + the execution engine.
 
-Two projections connect the populations (input-hidden and hidden-output).
-The kernel supports the paper's three execution modes sharing one
-pipeline:
+A network is a chain of hypercolumnar populations
 
-  * unsupervised  — forward to hidden, update input-hidden plasticity
-  * supervised    — forward to hidden (frozen), update hidden-output
-                    plasticity with label one-hots as target activity
+    input -> hidden_1 -> ... -> hidden_L -> output
+
+with one plastic ``Projection`` per adjacent population pair plus the
+supervised readout head (last hidden -> output).  ``NetworkSpec`` is the
+static description (hashable — it is a jit static argument), ``DeepState``
+the learnable pytree.  The engine implements the paper's three execution
+modes over any depth (DESIGN.md §1):
+
+  * unsupervised  — layerwise greedy: forward through frozen lower
+                    projections, noisy forward + plasticity on the layer
+                    being trained (StreamBrain-style stacking);
+  * supervised    — forward through the whole frozen stack, update only
+                    the readout with label one-hots as target activity;
   * inference     — forward only, no state writes (the paper's smaller /
                     faster inference-only bitstream; here a separate jit
-                    path with no trace outputs)
+                    path with no trace outputs).
+
+Every projection dispatches through core.bcpnn_layer (DESIGN.md §3), so a
+stack may mix ``backend="jnp"`` and ``backend="pallas"`` per projection.
+The paper's three-population network is the depth-1 special case, kept as
+the thin ``BCPNNConfig`` preset below.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from .bcpnn_layer import Projection, ProjSpec, forward, init_projection, learn, rewire, support
-from .hypercolumns import LayerGeom, hc_softmax
+from .bcpnn_layer import (
+    Projection,
+    ProjSpec,
+    forward,
+    init_projection,
+    learn,
+    normalize,
+    rewire,
+    support,
+)
+from .hypercolumns import LayerGeom
 
+GeomLike = Union[LayerGeom, Tuple[int, int]]
+
+
+# ---------------------------------------------------------------- spec --
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """Static description of a deep BCPNN (hashable; jit-static).
+
+    ``projs[l]`` connects population l to population l+1 (projs[0].pre is
+    the input population); ``readout`` connects the last hidden population
+    to the output population (one WTA hypercolumn over the classes for
+    classification).
+    """
+
+    projs: Tuple[ProjSpec, ...]
+    readout: ProjSpec
+
+    def __post_init__(self):
+        if not self.projs:
+            raise ValueError("NetworkSpec needs at least one stack projection")
+        for a, b in zip(self.projs, self.projs[1:]):
+            if a.post != b.pre:
+                raise ValueError(f"population mismatch in stack: {a.post} "
+                                 f"feeds {b.pre}")
+        if self.projs[-1].post != self.readout.pre:
+            raise ValueError("readout.pre must equal the last hidden geometry")
+
+    @property
+    def depth(self) -> int:
+        """Number of plastic stack projections (= number of hidden layers)."""
+        return len(self.projs)
+
+    @property
+    def input_geom(self) -> LayerGeom:
+        return self.projs[0].pre
+
+    @property
+    def output_geom(self) -> LayerGeom:
+        return self.readout.post
+
+    @property
+    def n_classes(self) -> int:
+        return self.output_geom.N
+
+    def with_backend(self, backend: str) -> "NetworkSpec":
+        """Same network, every projection on ``backend``."""
+        return NetworkSpec(
+            projs=tuple(p.with_backend(backend) for p in self.projs),
+            readout=self.readout.with_backend(backend),
+        )
+
+
+def _as_geom(g: GeomLike) -> LayerGeom:
+    return g if isinstance(g, LayerGeom) else LayerGeom(*g)
+
+
+def make_network_spec(
+    input_geom: GeomLike,
+    hidden: Sequence[GeomLike],
+    n_classes: int,
+    alpha: float = 1e-3,
+    eps: float = 1e-4,
+    gain: float = 1.0,
+    nact: Optional[Sequence[Optional[int]]] = None,
+    backend: str = "jnp",
+    support_noise: float = 3.0,
+    noise_steps: int = 500,
+    struct_every: int = 0,
+) -> NetworkSpec:
+    """Build a NetworkSpec for a stack of ``len(hidden)`` hidden layers.
+
+    ``nact`` (optional) gives the patchy-connectivity budget per stack
+    projection (None entries = dense).  The training knobs apply to every
+    stack projection; per-projection overrides go through
+    ``dataclasses.replace`` on the result.
+    """
+    geoms = [_as_geom(input_geom)] + [_as_geom(h) for h in hidden]
+    nacts = list(nact) if nact is not None else [None] * (len(geoms) - 1)
+    if len(nacts) != len(geoms) - 1:
+        raise ValueError(f"nact has {len(nacts)} entries for "
+                         f"{len(geoms) - 1} projections")
+    projs = tuple(
+        ProjSpec(pre, post, alpha=alpha, eps=eps, gain=gain, nact=na,
+                 backend=backend, support_noise=support_noise,
+                 noise_steps=noise_steps, struct_every=struct_every)
+        for pre, post, na in zip(geoms[:-1], geoms[1:], nacts)
+    )
+    readout = ProjSpec(geoms[-1], LayerGeom(1, n_classes), alpha=alpha,
+                       eps=eps, gain=gain, nact=None, backend=backend)
+    return NetworkSpec(projs=projs, readout=readout)
+
+
+# --------------------------------------------------------------- state --
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeepState:
+    """All learnable state (a pytree — checkpointable, shardable)."""
+
+    projs: Tuple[Projection, ...]
+    readout: Projection
+    step: jax.Array  # scalar int32 streaming-step counter
+    key: jax.Array   # PRNG key for exploration noise
+
+    # Legacy aliases for the paper's depth-1 network.
+    @property
+    def ih(self) -> Projection:
+        return self.projs[0]
+
+    @property
+    def ho(self) -> Projection:
+        return self.readout
+
+
+# Back-compat name: the depth-1 state of the original three-population
+# network is just a DeepState with one stack projection.
+BCPNNState = DeepState
+
+
+def init_deep(spec: NetworkSpec, key: jax.Array) -> DeepState:
+    keys = jax.random.split(key, spec.depth + 2)
+    return DeepState(
+        projs=tuple(init_projection(p, k) for p, k in zip(spec.projs, keys)),
+        readout=init_projection(spec.readout, keys[spec.depth]),
+        step=jnp.zeros((), jnp.int32),
+        key=keys[spec.depth + 1],
+    )
+
+
+# ---------------------------------------------------------------- modes --
+
+def stack_rates(state: DeepState, spec: NetworkSpec, x: jax.Array,
+                depth: Optional[int] = None) -> jax.Array:
+    """Deterministic forward through the first ``depth`` stack projections
+    (all of them by default).  x: (B, N_input)."""
+    n = spec.depth if depth is None else depth
+    h = x
+    for l in range(n):
+        h = forward(state.projs[l], spec.projs[l], h)
+    return h
+
+
+def _noisy_rates(proj: Projection, pspec: ProjSpec, h: jax.Array,
+                 key: jax.Array) -> jax.Array:
+    """Post rates with annealed exploration noise on the support.
+
+    This is the symmetry-breaking "neuronal noise" that prevents
+    minicolumn collapse and drives the soft-WTA clustering to use all
+    minicolumns.  The anneal clock is the projection's own trace counter,
+    so each layer of a greedy stack starts its schedule fresh.
+    """
+    s = support(proj, pspec, h)
+    t = proj.traces.t.astype(jnp.float32)
+    amp = pspec.support_noise * jnp.maximum(
+        0.0, 1.0 - t / max(1, pspec.noise_steps))
+    s = s + amp * jax.random.normal(key, s.shape, s.dtype)
+    return normalize(s, pspec)
+
+
+def train_projection_step(state: DeepState, spec: NetworkSpec, h: jax.Array,
+                          layer: int) -> DeepState:
+    """Plasticity on stack projection ``layer`` given its DIRECT input
+    rates ``h`` (i.e. the frozen lower layers already applied).  The
+    trainer uses this to hoist the frozen forward out of the epoch loop:
+    during layer ``l``'s greedy phase the representation below it is
+    deterministic, so it is computed once per phase, not once per step."""
+    pspec = spec.projs[layer]
+    key, sub = jax.random.split(state.key)
+    y = _noisy_rates(state.projs[layer], pspec, h, sub)
+    proj = learn(state.projs[layer], pspec, h, y)
+    if pspec.struct_every > 0:
+        proj = jax.lax.cond(
+            proj.traces.t % pspec.struct_every == 0,
+            lambda p: rewire(p, pspec),
+            lambda p: p,
+            proj,
+        )
+    projs = state.projs[:layer] + (proj,) + state.projs[layer + 1:]
+    return DeepState(projs=projs, readout=state.readout,
+                     step=state.step + 1, key=key)
+
+
+def unsupervised_layer_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
+                            layer: int) -> DeepState:
+    """One streaming batch of unsupervised learning on stack projection
+    ``layer`` (projections below it are frozen feature extractors)."""
+    h = stack_rates(state, spec, x, depth=layer)
+    return train_projection_step(state, spec, h, layer)
+
+
+def supervised_readout_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
+                            labels: jax.Array) -> DeepState:
+    """One streaming batch of the supervised readout (labels: (B,) int).
+    The stack is frozen; only the readout projection learns."""
+    h = stack_rates(state, spec, x)
+    y = jax.nn.one_hot(labels, spec.n_classes, dtype=h.dtype)
+    ro = learn(state.readout, spec.readout, h, y)
+    return DeepState(projs=state.projs, readout=ro,
+                     step=state.step + 1, key=state.key)
+
+
+def infer(state: DeepState, spec_or_cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Inference-only path: class probabilities + argmax predictions.
+
+    No trace reads beyond the folded weights and no state writes — the
+    analogue of the paper's resource-light inference-only configuration.
+    """
+    spec = as_spec(spec_or_cfg)
+    h = stack_rates(state, spec, x)
+    s = support(state.readout, spec.readout, h)
+    probs = normalize(s, spec.readout)
+    return probs, jnp.argmax(probs, axis=-1)
+
+
+# ------------------------------------------------- legacy depth-1 API ----
 
 @dataclasses.dataclass(frozen=True)
 class BCPNNConfig:
-    """Static network configuration (paper Table 1 schema)."""
+    """The paper's three-population network (Table 1 schema) — a thin
+    preset over NetworkSpec with exactly one hidden layer."""
 
     input_hc: int          # input hypercolumns (e.g. 28*28 pixels)
     input_mc: int = 2      # minicolumns per input HC (complement pairs)
@@ -37,12 +276,9 @@ class BCPNNConfig:
     eps: float = 1e-4
     gain: float = 1.0
     struct_every: int = 0  # steps between rewires; 0 = no structural plasticity
-    # Exploration noise on the hidden support during unsupervised learning
-    # (linearly annealed to zero over noise_steps).  This is the symmetry-
-    # breaking "neuronal noise" that prevents minicolumn collapse and drives
-    # the soft-WTA clustering to use all minicolumns.
     support_noise: float = 3.0
     noise_steps: int = 500
+    backend: str = "jnp"   # backend for both projections
 
     @property
     def input_geom(self) -> LayerGeom:
@@ -58,84 +294,44 @@ class BCPNNConfig:
         return LayerGeom(1, self.n_classes)
 
     def ih_spec(self) -> ProjSpec:
-        return ProjSpec(self.input_geom, self.hidden_geom, self.alpha,
-                        self.eps, self.gain, self.nact_hi)
+        return ProjSpec(self.input_geom, self.hidden_geom, alpha=self.alpha,
+                        eps=self.eps, gain=self.gain, nact=self.nact_hi,
+                        backend=self.backend,
+                        support_noise=self.support_noise,
+                        noise_steps=self.noise_steps,
+                        struct_every=self.struct_every)
 
     def ho_spec(self) -> ProjSpec:
-        return ProjSpec(self.hidden_geom, self.output_geom, self.alpha,
-                        self.eps, self.gain, None)
+        return ProjSpec(self.hidden_geom, self.output_geom, alpha=self.alpha,
+                        eps=self.eps, gain=self.gain, nact=None,
+                        backend=self.backend)
+
+    def network_spec(self) -> NetworkSpec:
+        return NetworkSpec(projs=(self.ih_spec(),), readout=self.ho_spec())
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class BCPNNState:
-    """All learnable state (a pytree — checkpointable, shardable)."""
-
-    ih: Projection
-    ho: Projection
-    step: jax.Array  # scalar int32 streaming-step counter
-    key: jax.Array   # PRNG key for exploration noise
+def as_spec(spec_or_cfg) -> NetworkSpec:
+    """Normalize a BCPNNConfig (legacy) or NetworkSpec to a NetworkSpec."""
+    if isinstance(spec_or_cfg, NetworkSpec):
+        return spec_or_cfg
+    return spec_or_cfg.network_spec()
 
 
-def init_network(cfg: BCPNNConfig, key: jax.Array) -> BCPNNState:
-    k1, k2, k3 = jax.random.split(key, 3)
-    return BCPNNState(
-        ih=init_projection(cfg.ih_spec(), k1),
-        ho=init_projection(cfg.ho_spec(), k2),
-        step=jnp.zeros((), jnp.int32),
-        key=k3,
-    )
+def init_network(spec_or_cfg, key: jax.Array) -> DeepState:
+    return init_deep(as_spec(spec_or_cfg), key)
 
 
-# ---------------------------------------------------------------- modes --
-
-def hidden_rates(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array) -> jax.Array:
-    return forward(state.ih, cfg.ih_spec(), x)
+def hidden_rates(state: DeepState, spec_or_cfg, x: jax.Array) -> jax.Array:
+    return stack_rates(state, as_spec(spec_or_cfg), x)
 
 
-def _noisy_hidden(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array,
-                  key: jax.Array) -> jax.Array:
-    """Hidden rates with annealed exploration noise on the support."""
-    spec = cfg.ih_spec()
-    s = support(state.ih, spec, x)
-    amp = cfg.support_noise * jnp.maximum(
-        0.0, 1.0 - state.step.astype(jnp.float32) / max(1, cfg.noise_steps))
-    s = s + amp * jax.random.normal(key, s.shape, s.dtype)
-    return hc_softmax(s, cfg.hidden_geom, cfg.gain)
-
-
-def unsupervised_step(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array) -> BCPNNState:
+def unsupervised_step(state: DeepState, spec_or_cfg, x: jax.Array,
+                      layer: int = 0) -> DeepState:
     """One streaming batch of unsupervised representation learning."""
-    spec = cfg.ih_spec()
-    key, sub = jax.random.split(state.key)
-    h = _noisy_hidden(state, cfg, x, sub)
-    ih = learn(state.ih, spec, x, h)
-    if cfg.struct_every > 0:
-        ih = jax.lax.cond(
-            (state.step + 1) % cfg.struct_every == 0,
-            lambda p: rewire(p, spec),
-            lambda p: p,
-            ih,
-        )
-    return BCPNNState(ih=ih, ho=state.ho, step=state.step + 1, key=key)
+    return unsupervised_layer_step(state, as_spec(spec_or_cfg), x, layer)
 
 
-def supervised_step(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array,
-                    labels: jax.Array) -> BCPNNState:
+def supervised_step(state: DeepState, spec_or_cfg, x: jax.Array,
+                    labels: jax.Array) -> DeepState:
     """One streaming batch of the supervised readout (labels: (B,) int)."""
-    h = forward(state.ih, cfg.ih_spec(), x)
-    y = jax.nn.one_hot(labels, cfg.n_classes, dtype=h.dtype)
-    ho = learn(state.ho, cfg.ho_spec(), h, y)
-    return BCPNNState(ih=state.ih, ho=ho, step=state.step + 1, key=state.key)
-
-
-def infer(state: BCPNNState, cfg: BCPNNConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Inference-only path: class probabilities + argmax predictions.
-
-    No trace reads beyond the folded weights and no state writes — the
-    analogue of the paper's resource-light inference-only configuration.
-    """
-    h = forward(state.ih, cfg.ih_spec(), x)
-    s = support(state.ho, cfg.ho_spec(), h)
-    probs = hc_softmax(s, cfg.output_geom, cfg.gain)
-    return probs, jnp.argmax(probs, axis=-1)
+    return supervised_readout_step(state, as_spec(spec_or_cfg), x, labels)

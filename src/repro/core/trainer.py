@@ -1,28 +1,35 @@
-"""Streaming trainer for BCPNN — the host-side driver of the accelerator.
+"""Streaming trainer for deep BCPNN — the host-side driver of the
+accelerator.
 
-The paper's semi-unsupervised protocol (§5): N epochs of unsupervised
-representation learning on the input-hidden projection, ONE supervised
-pass on the hidden-output projection, then inference.  Epochs run as a
-single jit'd ``lax.scan`` over batch-major data, so the whole epoch is one
-device program — the TPU analogue of keeping the FPGA pipeline hot.
+The paper's semi-unsupervised protocol (§5), generalized to any depth
+(DESIGN.md §1): for each stack projection in turn, N epochs of
+unsupervised representation learning (layerwise greedy — lower layers are
+frozen feature extractors while a layer trains), then ONE supervised pass
+on the readout projection, then inference.  Epochs run as a single jit'd
+``lax.scan`` over batch-major data, so a whole epoch is one device
+program — the TPU analogue of keeping the FPGA pipeline hot.
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint import CheckpointManager
+from .bcpnn_layer import forward
 from .network import (
-    BCPNNConfig,
-    BCPNNState,
+    DeepState,
+    NetworkSpec,
+    as_spec,
     infer,
-    init_network,
-    supervised_step,
-    unsupervised_step,
+    init_deep,
+    supervised_readout_step,
+    train_projection_step,
+    unsupervised_layer_step,
 )
 
 
@@ -32,43 +39,87 @@ def _batchify(x: np.ndarray, batch: int) -> np.ndarray:
     return x[: nb * batch].reshape(nb, batch, *x.shape[1:])
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
-def unsupervised_epoch(state: BCPNNState, cfg: BCPNNConfig, xs: jax.Array) -> BCPNNState:
-    """xs: (nbatch, B, Ni) — one full unsupervised epoch on device."""
+@functools.partial(jax.jit, static_argnames=("spec", "layer"),
+                   donate_argnums=(0,))
+def unsupervised_layer_epoch(state: DeepState, spec: NetworkSpec,
+                             xs: jax.Array, layer: int) -> DeepState:
+    """xs: (nbatch, B, Ni) — one unsupervised epoch on stack projection
+    ``layer``, fully on device."""
     def body(st, x):
-        return unsupervised_step(st, cfg, x), None
+        return unsupervised_layer_step(st, spec, x, layer), None
     state, _ = jax.lax.scan(body, state, xs)
     return state
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
-def supervised_epoch(state: BCPNNState, cfg: BCPNNConfig, xs: jax.Array,
-                     ys: jax.Array) -> BCPNNState:
+def unsupervised_epoch(state: DeepState, spec_or_cfg, xs: jax.Array,
+                       layer: int = 0) -> DeepState:
+    """Legacy entry point (depth-1 networks train their only projection)."""
+    return unsupervised_layer_epoch(state, as_spec(spec_or_cfg), xs, layer)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "layer"),
+                   donate_argnums=(0,))
+def _train_projection_epoch(state: DeepState, spec: NetworkSpec,
+                            hs: jax.Array, layer: int) -> DeepState:
+    """One epoch over PRECOMPUTED layer-input rates hs: (nbatch, B, N_l)."""
+    def body(st, h):
+        return train_projection_step(st, spec, h, layer), None
+    state, _ = jax.lax.scan(body, state, hs)
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "layer"))
+def _propagate_batches(state: DeepState, spec: NetworkSpec, xs: jax.Array,
+                       layer: int) -> jax.Array:
+    """Push batched rates through the (now frozen) projection ``layer``."""
+    return jax.lax.map(
+        lambda xb: forward(state.projs[layer], spec.projs[layer], xb), xs)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def _supervised_epoch(state: DeepState, spec: NetworkSpec, xs: jax.Array,
+                      ys: jax.Array) -> DeepState:
     def body(st, xy):
         x, y = xy
-        return supervised_step(st, cfg, x, y), None
+        return supervised_readout_step(st, spec, x, y), None
     state, _ = jax.lax.scan(body, state, (xs, ys))
     return state
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def eval_batches(state: BCPNNState, cfg: BCPNNConfig, xs: jax.Array,
-                 ys: jax.Array) -> jax.Array:
-    """Mean accuracy over (nbatch, B, ...) eval data."""
+def supervised_epoch(state: DeepState, spec_or_cfg, xs: jax.Array,
+                     ys: jax.Array) -> DeepState:
+    return _supervised_epoch(state, as_spec(spec_or_cfg), xs, ys)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _eval_batches(state: DeepState, spec: NetworkSpec, xs: jax.Array,
+                  ys: jax.Array) -> jax.Array:
     def body(_, xy):
         x, y = xy
-        _, pred = infer(state, cfg, x)
+        _, pred = infer(state, spec, x)
         return None, jnp.mean((pred == y).astype(jnp.float32))
     _, accs = jax.lax.scan(body, None, (xs, ys))
     return jnp.mean(accs)
 
 
-class Trainer:
-    """End-to-end driver mirroring the paper's experimental protocol."""
+def eval_batches(state: DeepState, spec_or_cfg, xs: jax.Array,
+                 ys: jax.Array) -> jax.Array:
+    """Mean accuracy over (nbatch, B, ...) eval data."""
+    return _eval_batches(state, as_spec(spec_or_cfg), xs, ys)
 
-    def __init__(self, cfg: BCPNNConfig, seed: int = 0):
+
+class Trainer:
+    """End-to-end driver mirroring the paper's experimental protocol.
+
+    Accepts either a legacy ``BCPNNConfig`` (the paper's depth-1 network)
+    or a ``NetworkSpec`` of any depth; ``epochs`` in ``fit`` applies per
+    stack projection (layerwise greedy schedule).
+    """
+
+    def __init__(self, cfg, seed: int = 0):
         self.cfg = cfg
-        self.state = init_network(cfg, jax.random.PRNGKey(seed))
+        self.spec = as_spec(cfg)
+        self.state = init_deep(self.spec, jax.random.PRNGKey(seed))
 
     def fit(
         self,
@@ -78,32 +129,64 @@ class Trainer:
         batch: int = 128,
         log: bool = False,
     ) -> Dict[str, float]:
-        """Unsupervised epochs + one supervised pass.  Returns timings."""
+        """Layerwise unsupervised epochs + one supervised pass.
+
+        Returns timings (per-image latency covers the whole unsupervised
+        phase, i.e. depth * epochs passes over the data).
+        """
         xs = jnp.asarray(_batchify(x_train, batch))
         ys = jnp.asarray(_batchify(y_train, batch))
         t0 = time.perf_counter()
-        for e in range(epochs):
-            self.state = unsupervised_epoch(self.state, self.cfg, xs)
-            if log:
-                jax.block_until_ready(self.state.ih.w)
-                print(f"  unsupervised epoch {e + 1}/{epochs} done")
-        jax.block_until_ready(self.state.ih.w)
+        # Greedy phases reuse the frozen representation: ``cur`` holds the
+        # dataset's rates at the current layer's input, computed once per
+        # phase instead of once per step inside every epoch.
+        cur = xs
+        for layer in range(self.spec.depth):
+            for e in range(epochs):
+                self.state = _train_projection_epoch(
+                    self.state, self.spec, cur, layer)
+                if log:
+                    jax.block_until_ready(self.state.projs[layer].w)
+                    print(f"  layer {layer + 1}/{self.spec.depth} "
+                          f"unsupervised epoch {e + 1}/{epochs} done")
+            if layer + 1 < self.spec.depth:
+                cur = _propagate_batches(self.state, self.spec, cur, layer)
+        jax.block_until_ready(self.state.projs[-1].w)
         t1 = time.perf_counter()
-        self.state = supervised_epoch(self.state, self.cfg, xs, ys)
-        jax.block_until_ready(self.state.ho.w)
+        self.state = supervised_epoch(self.state, self.spec, xs, ys)
+        jax.block_until_ready(self.state.readout.w)
         t2 = time.perf_counter()
         n_img = xs.shape[0] * xs.shape[1]
         return {
             "unsup_s": t1 - t0,
             "sup_s": t2 - t1,
-            "train_ms_per_img": 1e3 * (t1 - t0) / max(1, n_img * epochs),
+            "train_ms_per_img": 1e3 * (t1 - t0)
+            / max(1, n_img * epochs * self.spec.depth),
         }
 
     def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 128) -> float:
         xs = jnp.asarray(_batchify(x, batch))
         ys = jnp.asarray(_batchify(y, batch))
-        return float(eval_batches(self.state, self.cfg, xs, ys))
+        return float(eval_batches(self.state, self.spec, xs, ys))
 
     def predict(self, x: np.ndarray) -> np.ndarray:
-        _, pred = infer(self.state, self.cfg, jnp.asarray(x))
+        _, pred = infer(self.state, self.spec, jnp.asarray(x))
         return np.asarray(pred)
+
+    # ------------------------------------------------------ checkpoints --
+    def save(self, directory: str, step: Optional[int] = None) -> None:
+        """Blocking checkpoint of the full DeepState pytree."""
+        mgr = CheckpointManager(directory)
+        mgr.save(step if step is not None else int(self.state.step),
+                 self.state, blocking=True)
+
+    def restore(self, directory: str, step: Optional[int] = None) -> int:
+        """Restore the latest (or a specific) checkpoint into this trainer.
+        The target structure comes from the current spec, so depth or
+        geometry mismatches fail with a clear error."""
+        mgr = CheckpointManager(directory)
+        step = step if step is not None else mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+        self.state = mgr.restore(step, self.state)
+        return step

@@ -37,6 +37,12 @@ DEFAULT_RULES: Dict[str, Axis] = {
     "conv": None,
     "state": None,
     "cache_seq": None,          # KV-cache sequence axis (bind to model for long ctx)
+    # BCPNN projections: the (Ni, Nj) joint trace / weight matrices shard
+    # along the pre-synaptic rows (the contraction dim of the support
+    # matmul); the post axis stays whole so each device's HC softmax and
+    # trace EMA are local (no cross-device normalization traffic).
+    "proj_pre": "model",
+    "proj_post": None,
 }
 
 
@@ -109,6 +115,24 @@ def named_sharding(dims: Sequence[Axis], shape: Sequence[int]) -> Optional[Named
     if mesh is None:
         return None
     return NamedSharding(mesh, spec_for(dims, shape))
+
+
+def projection_shardings(state) -> Optional[object]:
+    """NamedSharding pytree for a BCPNN ``DeepState`` (or any pytree of
+    ``Projection``s): 2-D leaves — w, p_ij, the HC mask — shard along the
+    pre-synaptic axis ("proj_pre"); vectors and scalars replicate.  Feed
+    the result to ``CheckpointManager.restore`` or ``jax.device_put`` for
+    per-projection placement.  Returns None outside a sharding context."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return None
+
+    def leaf_sharding(x):
+        if getattr(x, "ndim", 0) == 2:
+            return named_sharding(("proj_pre", "proj_post"), x.shape)
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf_sharding, state)
 
 
 def current_mesh() -> Optional[Mesh]:

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tiling import fit_block, fit_hc_block
+
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int, n_mc: int, gain: float):
     k = pl.program_id(2)
@@ -63,13 +65,9 @@ def bcpnn_fwd_pallas(
     b, ni = x.shape
     nj = w.shape[1]
     assert nj == n_hc * n_mc
-    block_b = min(block_b, b)
-    block_k = min(block_k, ni)
-    block_j = min(block_j, nj)
-    if block_j % n_mc != 0:  # keep HCs whole within a tile
-        block_j = n_mc * max(1, block_j // n_mc)
-    assert b % block_b == 0 and ni % block_k == 0 and nj % block_j == 0, \
-        (b, ni, nj, block_b, block_k, block_j)
+    block_b = fit_block(b, block_b)
+    block_k = fit_block(ni, block_k)
+    block_j = fit_hc_block(n_hc, n_mc, block_j)  # keep HCs whole in a tile
     k_steps = ni // block_k
     grid = (b // block_b, nj // block_j, k_steps)
     return pl.pallas_call(

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tiling import fit_block
+
 
 def _kernel(x_ref, y_ref, pij_ref, lpi_ref, lpj_ref, mask_ref, alpha_ref,
             pij_out_ref, w_out_ref, acc_ref, *, k_steps: int, batch: int, eps: float):
@@ -70,11 +72,9 @@ def bcpnn_update_pallas(
     """Returns (new_pij, new_w) — see module docstring."""
     b, ni = x.shape
     nj = y.shape[1]
-    block_i = min(block_i, ni)
-    block_j = min(block_j, nj)
-    block_k = min(block_k, b)
-    assert ni % block_i == 0 and nj % block_j == 0 and b % block_k == 0, \
-        (ni, nj, b, block_i, block_j, block_k)
+    block_i = fit_block(ni, block_i)
+    block_j = fit_block(nj, block_j)
+    block_k = fit_block(b, block_k)
     k_steps = b // block_k
     grid = (ni // block_i, nj // block_j, k_steps)
     kern = functools.partial(_kernel, k_steps=k_steps, batch=b, eps=eps)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiling import fit_block
+
 
 def _kernel(s_ref, o_ref, *, n_mc: int, gain: float):
     s = s_ref[...].astype(jnp.float32) * gain          # (tb, th*M)
@@ -39,9 +41,8 @@ def hc_softmax_pallas(
     """support: (B, n_hc*n_mc) -> rates, softmax within each HC."""
     b, n = support.shape
     assert n == n_hc * n_mc, (n, n_hc, n_mc)
-    block_b = min(block_b, b)
-    block_h = min(block_h, n_hc)
-    assert b % block_b == 0 and n_hc % block_h == 0, (b, n_hc, block_b, block_h)
+    block_b = fit_block(b, block_b)
+    block_h = fit_block(n_hc, block_h)
     bn = block_h * n_mc
     grid = (b // block_b, n_hc // block_h)
     return pl.pallas_call(

@@ -2,11 +2,12 @@
 
 Auto-selects interpret mode off-TPU (this container validates kernels on
 CPU via the Pallas interpreter; on a real TPU the same calls compile to
-Mosaic).  Also provides the fused drop-in replacements for the core's
-activation/plasticity stages (`fused_forward`, `fused_learn`) — the
-"accelerated" path benchmarked against the pure-jnp reference path in
-benchmarks/bench_stream_vs_seq.py, mirroring the paper's sequential vs
-stream-dataflow comparison.
+Mosaic).  `fused_forward` and `fused_learn` are the production
+implementations behind `ProjSpec(backend="pallas")`: the core's dispatch
+point (core/bcpnn_layer.py, DESIGN.md §3) routes every activation /
+plasticity call of a pallas-tagged projection here, mirroring the paper's
+stream-dataflow configuration, while the pure-jnp reference path plays
+the sequential baseline (benchmarks/bench_stream_vs_seq.py).
 """
 from __future__ import annotations
 

@@ -1,0 +1,38 @@
+"""Block-size fitting for the Pallas kernels.
+
+The kernels tile (batch, pre, post) with default MXU-friendly blocks, but
+real BCPNN geometries are rarely powers of two (e.g. Model 1's pre side is
+28*28*2 = 1568 units).  Rather than asserting divisibility, each wrapper
+fits its requested block down to the largest divisor of the dimension —
+degrading tile efficiency, never correctness.  A badly-aligned fit (not a
+multiple of the 8-sublane f32 tile) is warned about once per site: it
+works under the CPU interpreter but may not compile, or will run
+pathologically, on the Mosaic TPU target — pad the dimension instead.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def fit_block(dim: int, block: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (>= 1)."""
+    requested = block
+    block = max(1, min(block, dim))
+    while dim % block:
+        block -= 1
+    # Tiny toy geometries (tests, examples) are inherently unaligned and
+    # only ever run interpreted; warn at sizes someone would put on a TPU.
+    if dim >= 64 and block % 8 != 0:
+        warnings.warn(
+            f"Pallas block for dimension {dim} fitted to {block} "
+            f"(requested {requested}), which is not 8-sublane aligned; "
+            f"fine in interpret mode, but pad the dimension for TPU",
+            stacklevel=2)
+    return block
+
+
+def fit_hc_block(n_hc: int, n_mc: int, block_units: int) -> int:
+    """Fit a unit-count block for a hypercolumnar axis of n_hc * n_mc
+    units: a multiple of n_mc (HCs stay whole, so softmax is block-local)
+    that divides the total unit count."""
+    return n_mc * fit_block(n_hc, max(1, block_units // n_mc))

@@ -71,7 +71,8 @@ def main():
             start_step = mgr.latest_step()
             shardings = {"params": param_shardings(params),
                          "opt": jax.tree.map(lambda _: None, opt_state)}
-            state = mgr.restore(start_step, {"params": params, "opt": opt_state})
+            state = mgr.restore(start_step, {"params": params, "opt": opt_state},
+                                shardings)
             params, opt_state = state["params"], state["opt"]
             print(f"[train] resumed from step {start_step}")
 
@@ -111,6 +112,12 @@ def main():
                     mgr.save(step_id + 1, {"params": params, "opt": opt_state})
         finally:
             prefetch.close()
+        if not losses:  # resumed at or past --steps: nothing left to run,
+            # and saving here would mislabel step-`start_step` params as
+            # a step-`args.steps` checkpoint
+            print(f"[train] checkpoint already at step {start_step}; "
+                  f"no steps to run")
+            return
         if mgr is not None:
             mgr.save(args.steps, {"params": params, "opt": opt_state},
                      blocking=True)
@@ -118,7 +125,17 @@ def main():
             print(f"[train] straggler events: {timer.events}")
         print(f"[train] median step {timer.median*1e3:.0f}ms; "
               f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
-        assert losses[-1] < losses[0], "loss did not decrease"
+        # Progress check on windowed means: single-step losses are noisy,
+        # and a resumed run may only execute a handful of steps (its
+        # losses start from the already-trained level), so the strict
+        # last < first comparison only applies to runs long enough to
+        # average over.
+        if len(losses) >= 8:
+            w = max(1, len(losses) // 4)
+            head_loss = float(np.mean(losses[:w]))
+            tail_loss = float(np.mean(losses[-w:]))
+            assert tail_loss < head_loss, \
+                f"loss did not decrease ({head_loss:.4f} -> {tail_loss:.4f})"
 
 
 if __name__ == "__main__":

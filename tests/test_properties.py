@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests "
+                    "need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hypercolumns import LayerGeom, encode_scalar_hcs, hc_softmax
