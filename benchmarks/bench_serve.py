@@ -1,0 +1,99 @@
+"""Serving benchmark: offered-load sweep through the microbatched engine.
+
+For each backend (jnp reference, fused Pallas dispatch) and each offered
+arrival rate, drives the open-loop generator through ``BCPNNService`` and
+records achieved images/s, p50/p99 latency and batch occupancy — the
+serving-side perf trajectory (the training side records via
+bench_stream_vs_seq).  A very high offered rate measures capacity (the
+admission queue saturates and microbatches run back-to-back at the
+largest bucket); a moderate rate measures latency at sustainable load.
+
+Output: ``name,value,unit`` CSV rows, one machine-readable
+``bench_serve_json={...}`` line, and an optional ``--json PATH`` dump.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.bcpnn_models import deep_synth_spec
+from repro.core import Trainer
+from repro.data.synthetic import encode_images, make_synthetic
+from repro.serve import BCPNNService, ServeMetrics, run_open_loop
+
+
+def bench_backend(backend: str, rates, depth: int = 2, side: int = 8,
+                  n_classes: int = 4, requests: int = 128,
+                  max_batch: int = 16, epochs: int = 2, seed: int = 0,
+                  csv: bool = True):
+    ds = make_synthetic(512, 128, side, n_classes, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec = deep_synth_spec(side=side, depth=depth, n_classes=n_classes,
+                           hidden_hc=8, hidden_mc=16, backend=backend)
+    tr = Trainer(spec, seed=seed)
+    tr.fit(xt, ds.y_train, epochs=epochs, batch=64)
+
+    # One service per backend, reused across rates: the per-instance jit
+    # cache keeps every bucket shape compiled once (a per-rate instance
+    # would pay the whole warmup again), with fresh metrics per run.
+    svc = BCPNNService(tr.state, spec, max_batch=max_batch)
+    svc.warmup()
+    rows = []
+    for rate in rates:
+        svc.metrics = ServeMetrics()
+        svc.start(warmup=False)
+        rep = run_open_loop(svc, xe, ds.y_test, n_requests=requests,
+                            rate_hz=rate, seed=seed)
+        svc.stop()
+        snap = svc.snapshot()
+        row = {
+            "backend": backend,
+            "depth": depth,
+            "offered_hz": rate,
+            "achieved_hz": rep.achieved_rate_hz,
+            "images_per_s": snap["images_per_s"],
+            "p50_ms": snap["p50_ms"],
+            "p99_ms": snap["p99_ms"],
+            "batch_occupancy": snap["batch_occupancy"],
+            "served_accuracy": rep.accuracy(),
+        }
+        rows.append(row)
+        if csv:
+            tag = f"serve_{backend}_d{depth}_r{rate:g}"
+            print(f"{tag},{row['images_per_s']:.1f},images_per_s")
+            print(f"{tag},{row['p50_ms']:.2f},p50_ms")
+            print(f"{tag},{row['p99_ms']:.2f},p99_ms")
+            print(f"{tag},{row['batch_occupancy']*100:.0f},occupancy_pct")
+    return rows
+
+
+def run(csv=True, json_path=None, rates=(200.0, 1e5),
+        backends=("jnp", "pallas"), requests=128):
+    rows = []
+    for backend in backends:
+        rows += bench_backend(backend, rates, requests=requests, csv=csv)
+    summary = {"rows": rows, "device": jax.default_backend()}
+    if csv:
+        print("bench_serve_json=" + json.dumps(summary))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write the JSON summary to this path")
+    ap.add_argument("--rates", default="200,100000",
+                    help="comma-separated offered rates (req/s)")
+    ap.add_argument("--backends", default="jnp,pallas")
+    ap.add_argument("--requests", type=int, default=128)
+    args = ap.parse_args()
+    run(json_path=args.json,
+        rates=tuple(float(r) for r in args.rates.split(",")),
+        backends=tuple(args.backends.split(",")),
+        requests=args.requests)

@@ -50,7 +50,12 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------ save --
-    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             extra: Optional[dict] = None) -> None:
+        """``extra`` (optional, JSON-serializable) is stored in the
+        manifest — e.g. the serialized NetworkSpec
+        (``core.network.spec_to_dict``), so a server can rebuild the
+        network from the checkpoint directory alone (``read_extra``)."""
         self.wait()
         names, leaves, _ = _flatten_with_names(tree)
         host_leaves = []
@@ -71,6 +76,8 @@ class CheckpointManager:
                 "leaves": {n: {"shape": list(a.shape), "dtype": str(a.dtype)}
                            for n, a in zip(names, host_leaves)},
             }
+            if extra is not None:
+                manifest["extra"] = extra
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             if os.path.exists(final):
@@ -105,6 +112,13 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_extra(self, step: int) -> Optional[dict]:
+        """The ``extra`` metadata stored with ``save`` (None if absent)."""
+        self.wait()
+        with open(os.path.join(self.dir, f"step_{step}",
+                               "manifest.json")) as f:
+            return json.load(f).get("extra")
 
     def restore(self, step: int, target: Any, shardings: Any = None) -> Any:
         """Restore into the structure of `target`, resharding elastically.

@@ -3,7 +3,7 @@ from .hypercolumns import LayerGeom, encode_scalar_hcs, hc_hardmax, hc_softmax
 from .traces import Traces, init_traces, mutual_information, update_traces, weights_from_traces
 from .bcpnn_layer import (
     BACKENDS, Projection, ProjSpec, forward, init_projection, learn,
-    normalize, rewire, support,
+    normalize, rewire, support, topk_mask,
 )
 from .network import (
     BCPNNConfig,
@@ -16,6 +16,8 @@ from .network import (
     init_deep,
     init_network,
     make_network_spec,
+    spec_from_dict,
+    spec_to_dict,
     stack_rates,
     supervised_readout_step,
     supervised_step,
@@ -24,8 +26,8 @@ from .network import (
     unsupervised_step,
 )
 from .trainer import (
-    Trainer, eval_batches, supervised_epoch, unsupervised_epoch,
-    unsupervised_layer_epoch,
+    Trainer, eval_batches, evaluate_padded, supervised_epoch,
+    unsupervised_epoch, unsupervised_layer_epoch,
 )
 from .head import (
     BCPNNHeadConfig,
@@ -40,13 +42,14 @@ __all__ = [
     "LayerGeom", "encode_scalar_hcs", "hc_hardmax", "hc_softmax",
     "Traces", "init_traces", "mutual_information", "update_traces", "weights_from_traces",
     "BACKENDS", "Projection", "ProjSpec", "forward", "init_projection",
-    "learn", "normalize", "rewire", "support",
+    "learn", "normalize", "rewire", "support", "topk_mask",
     "BCPNNConfig", "BCPNNState", "DeepState", "NetworkSpec", "as_spec",
     "hidden_rates", "infer", "init_deep", "init_network", "make_network_spec",
+    "spec_from_dict", "spec_to_dict",
     "stack_rates", "supervised_readout_step", "supervised_step",
     "train_projection_step", "unsupervised_layer_step", "unsupervised_step",
-    "Trainer", "eval_batches", "supervised_epoch", "unsupervised_epoch",
-    "unsupervised_layer_epoch",
+    "Trainer", "eval_batches", "evaluate_padded", "supervised_epoch",
+    "unsupervised_epoch", "unsupervised_layer_epoch",
     "BCPNNHeadConfig", "encode_features", "head_predict", "head_supervised",
     "head_unsupervised", "init_head",
 ]

@@ -78,6 +78,21 @@ def _expand_mask(mask: jax.Array, spec: ProjSpec) -> jax.Array:
     return jnp.repeat(m, spec.post.M, axis=1)
 
 
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Exactly-k column mask: scores (Hi, Hj) -> float {0,1} mask with
+    exactly ``k`` ones per post-HC column.
+
+    A threshold test (``scores >= kth_value``) admits *every* pre-HC tied
+    at the cutoff, silently exceeding the ``nact`` connectivity budget —
+    common early in training, when many HC pairs share identical ~0 MI.
+    ``jax.lax.top_k`` returns k distinct indices (ties broken by index
+    order), so the scattered one-hots sum to exactly k per column.
+    """
+    _, idx = jax.lax.top_k(scores.T, k)  # (Hj, k) distinct row indices
+    hot = jax.nn.one_hot(idx, scores.shape[0], dtype=jnp.float32)
+    return jnp.sum(hot, axis=1).T  # (Hi, Hj)
+
+
 def init_projection(spec: ProjSpec, key: jax.Array) -> Projection:
     """Uniform-prior traces + random initial receptive fields.
 
@@ -91,8 +106,7 @@ def init_projection(spec: ProjSpec, key: jax.Array) -> Projection:
         mask = jnp.ones((spec.pre.H, spec.post.H), jnp.float32)
     else:
         scores = jax.random.uniform(key, (spec.pre.H, spec.post.H))
-        thresh = -jnp.sort(-scores, axis=0)[spec.nact - 1]  # per-post cutoff
-        mask = (scores >= thresh).astype(jnp.float32)
+        mask = topk_mask(scores, spec.nact)
     w, b = weights_from_traces(tr, spec.eps)
     w = w * _expand_mask(mask, spec)
     return Projection(traces=tr, w=w, b=b, mask=mask)
@@ -162,8 +176,7 @@ def rewire(proj: Projection, spec: ProjSpec) -> Projection:
     mi = mutual_information(
         proj.traces, spec.pre.H, spec.pre.M, spec.post.H, spec.post.M, spec.eps
     )  # (Hi, Hj)
-    thresh = -jnp.sort(-mi, axis=0)[spec.nact - 1]
-    mask = (mi >= thresh).astype(jnp.float32)
+    mask = topk_mask(mi, spec.nact)
     w, b = weights_from_traces(proj.traces, spec.eps)
     w = w * _expand_mask(mask, spec)
     return Projection(traces=proj.traces, w=w, b=b, mask=mask)

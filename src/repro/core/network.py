@@ -246,17 +246,29 @@ def supervised_readout_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
                      step=state.step + 1, key=state.key)
 
 
-def infer(state: DeepState, spec_or_cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def infer(state: DeepState, spec_or_cfg, x: jax.Array,
+          valid: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
     """Inference-only path: class probabilities + argmax predictions.
 
     No trace reads beyond the folded weights and no state writes — the
     analogue of the paper's resource-light inference-only configuration.
+
+    ``valid`` (optional, (B,) bool/0-1) marks genuine rows of a padded
+    batch: the forward pass is row-independent, so padding rows cannot
+    corrupt real ones, but their outputs are made inert (probs zeroed,
+    pred = -1) so a consumer — the serving engine's shape buckets, the
+    trainer's padded eval — can never mistake a pad slot for a result.
     """
     spec = as_spec(spec_or_cfg)
     h = stack_rates(state, spec, x)
     s = support(state.readout, spec.readout, h)
     probs = normalize(s, spec.readout)
-    return probs, jnp.argmax(probs, axis=-1)
+    pred = jnp.argmax(probs, axis=-1)
+    if valid is not None:
+        keep = valid.astype(bool)
+        probs = probs * keep[:, None].astype(probs.dtype)
+        pred = jnp.where(keep, pred, -1)
+    return probs, pred
 
 
 # ------------------------------------------------- legacy depth-1 API ----
@@ -315,6 +327,39 @@ def as_spec(spec_or_cfg) -> NetworkSpec:
     if isinstance(spec_or_cfg, NetworkSpec):
         return spec_or_cfg
     return spec_or_cfg.network_spec()
+
+
+# ------------------------------------------------- spec (de)serialization --
+
+def _projspec_to_dict(p: ProjSpec) -> dict:
+    d = dataclasses.asdict(p)
+    d["pre"] = [p.pre.H, p.pre.M]
+    d["post"] = [p.post.H, p.post.M]
+    return d
+
+
+def _projspec_from_dict(d: dict) -> ProjSpec:
+    d = dict(d)
+    d["pre"] = LayerGeom(*d["pre"])
+    d["post"] = LayerGeom(*d["post"])
+    return ProjSpec(**d)
+
+
+def spec_to_dict(spec_or_cfg) -> dict:
+    """JSON-serializable description of a NetworkSpec (checkpoint manifests,
+    serving configs).  Round-trips through ``spec_from_dict``."""
+    spec = as_spec(spec_or_cfg)
+    return {
+        "projs": [_projspec_to_dict(p) for p in spec.projs],
+        "readout": _projspec_to_dict(spec.readout),
+    }
+
+
+def spec_from_dict(d: dict) -> NetworkSpec:
+    return NetworkSpec(
+        projs=tuple(_projspec_from_dict(p) for p in d["projs"]),
+        readout=_projspec_from_dict(d["readout"]),
+    )
 
 
 def init_network(spec_or_cfg, key: jax.Array) -> DeepState:

@@ -27,6 +27,7 @@ from .network import (
     as_spec,
     infer,
     init_deep,
+    spec_to_dict,
     supervised_readout_step,
     train_projection_step,
     unsupervised_layer_step,
@@ -37,6 +38,21 @@ def _batchify(x: np.ndarray, batch: int) -> np.ndarray:
     """Trim to a whole number of batches and reshape batch-major."""
     nb = x.shape[0] // batch
     return x[: nb * batch].reshape(nb, batch, *x.shape[1:])
+
+
+def _batchify_padded(x: np.ndarray, batch: int):
+    """Zero-pad to a whole number of batches; also return the (nb, B)
+    validity mask marking genuine rows.  Unlike ``_batchify`` this loses
+    no tail samples — evaluation masks the pad slots out of the mean."""
+    n = x.shape[0]
+    nb = max(1, -(-n // batch))
+    pad = nb * batch - n
+    if pad:
+        x = np.concatenate(
+            [x, np.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+    valid = (np.arange(nb * batch) < n).astype(np.float32)
+    return (x.reshape(nb, batch, *x.shape[1:]),
+            valid.reshape(nb, batch))
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "layer"),
@@ -93,19 +109,42 @@ def supervised_epoch(state: DeepState, spec_or_cfg, xs: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _eval_batches(state: DeepState, spec: NetworkSpec, xs: jax.Array,
-                  ys: jax.Array) -> jax.Array:
-    def body(_, xy):
-        x, y = xy
-        _, pred = infer(state, spec, x)
-        return None, jnp.mean((pred == y).astype(jnp.float32))
-    _, accs = jax.lax.scan(body, None, (xs, ys))
-    return jnp.mean(accs)
+                  ys: jax.Array, valid: jax.Array) -> jax.Array:
+    """Accuracy over genuine samples only: correct/total are accumulated
+    under the validity mask, so a zero-padded tail batch neither skews the
+    mean (the old per-batch average weighted short batches equally) nor
+    contributes phantom predictions."""
+    def body(carry, xyv):
+        x, y, v = xyv
+        _, pred = infer(state, spec, x, valid=v)
+        correct, total = carry
+        correct = correct + jnp.sum((pred == y).astype(jnp.float32) * v)
+        return (correct, total + jnp.sum(v)), None
+    (correct, total), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (xs, ys, valid))
+    return correct / jnp.maximum(total, 1.0)
 
 
 def eval_batches(state: DeepState, spec_or_cfg, xs: jax.Array,
-                 ys: jax.Array) -> jax.Array:
-    """Mean accuracy over (nbatch, B, ...) eval data."""
-    return _eval_batches(state, as_spec(spec_or_cfg), xs, ys)
+                 ys: jax.Array, valid: Optional[jax.Array] = None) -> jax.Array:
+    """Mean accuracy over (nbatch, B, ...) eval data; ``valid`` (optional,
+    (nbatch, B) 0/1) masks padded rows out of the mean."""
+    if valid is None:
+        valid = jnp.ones(ys.shape[:2], jnp.float32)
+    return _eval_batches(state, as_spec(spec_or_cfg), xs, ys, valid)
+
+
+def evaluate_padded(state: DeepState, spec_or_cfg, x: np.ndarray,
+                    y: np.ndarray, batch: int = 128) -> float:
+    """Accuracy of ``state`` over the FULL unbatched eval set: the tail is
+    zero-padded to a whole batch and masked out of the mean, not dropped.
+    Shared by ``Trainer.evaluate`` and the serving drivers."""
+    if len(x) != len(y):
+        raise ValueError(f"x has {len(x)} samples but y has {len(y)} labels")
+    xs, valid = _batchify_padded(np.asarray(x), batch)
+    ys, _ = _batchify_padded(np.asarray(y, np.int32), batch)
+    return float(eval_batches(state, spec_or_cfg, jnp.asarray(xs),
+                              jnp.asarray(ys), jnp.asarray(valid)))
 
 
 class Trainer:
@@ -165,9 +204,9 @@ class Trainer:
         }
 
     def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 128) -> float:
-        xs = jnp.asarray(_batchify(x, batch))
-        ys = jnp.asarray(_batchify(y, batch))
-        return float(eval_batches(self.state, self.spec, xs, ys))
+        """Accuracy over the FULL eval set: the last partial batch is
+        zero-padded and masked out of the mean rather than dropped."""
+        return evaluate_padded(self.state, self.spec, x, y, batch)
 
     def predict(self, x: np.ndarray) -> np.ndarray:
         _, pred = infer(self.state, self.spec, jnp.asarray(x))
@@ -175,10 +214,13 @@ class Trainer:
 
     # ------------------------------------------------------ checkpoints --
     def save(self, directory: str, step: Optional[int] = None) -> None:
-        """Blocking checkpoint of the full DeepState pytree."""
+        """Blocking checkpoint of the full DeepState pytree.  The spec is
+        stored alongside (manifest ``extra``), so serving can rebuild the
+        network from the checkpoint directory alone."""
         mgr = CheckpointManager(directory)
         mgr.save(step if step is not None else int(self.state.step),
-                 self.state, blocking=True)
+                 self.state, blocking=True,
+                 extra={"spec": spec_to_dict(self.spec)})
 
     def restore(self, directory: str, step: Optional[int] = None) -> int:
         """Restore the latest (or a specific) checkpoint into this trainer.

@@ -13,6 +13,12 @@ from __future__ import annotations
 
 import warnings
 
+# Misalignment warnings already issued, keyed on (dim, fitted block).
+# ``warnings.warn`` alone fires on every trace — an epoch sweep re-traces
+# per shape and would spam one warning per jit — so dedupe here and warn
+# truly once per site.
+_warned_fits: set = set()
+
 
 def fit_block(dim: int, block: int) -> int:
     """Largest divisor of ``dim`` that is <= ``block`` (>= 1)."""
@@ -22,7 +28,8 @@ def fit_block(dim: int, block: int) -> int:
         block -= 1
     # Tiny toy geometries (tests, examples) are inherently unaligned and
     # only ever run interpreted; warn at sizes someone would put on a TPU.
-    if dim >= 64 and block % 8 != 0:
+    if dim >= 64 and block % 8 != 0 and (dim, block) not in _warned_fits:
+        _warned_fits.add((dim, block))
         warnings.warn(
             f"Pallas block for dimension {dim} fitted to {block} "
             f"(requested {requested}), which is not 8-sublane aligned; "

@@ -73,7 +73,9 @@ def main():
               f"{t_decode*1e3:.1f}ms "
               f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
         print(f"[serve] sample continuation: {gen[0][:12].tolist()}")
-        assert not np.any(np.isnan(gen)), "NaN tokens"
+        # gen holds integer token ids — isnan on it is vacuously false; the
+        # meaningful health check is on the final decode-step logits.
+        assert np.all(np.isfinite(np.asarray(logits))), "non-finite logits"
 
 
 if __name__ == "__main__":

@@ -1,0 +1,106 @@
+"""Admission queue + shape-bucketed microbatching.
+
+Requests arrive one sample at a time; the engine wants device-sized
+batches of a FIXED small set of shapes so each shape hits an
+already-compiled jit of ``infer`` (the serving analogue of the paper's
+pre-synthesized bitstreams: a handful of configurations, selected at
+runtime, never recompiled).  The batcher collects whatever is queued —
+up to the largest bucket, waiting at most ``max_wait_s`` after the first
+request of a batch — and the collector pads the group up to the smallest
+admissible bucket with zero rows plus a validity mask, which
+``core.network.infer`` uses to make pad-slot outputs inert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def default_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to ``max_batch`` (always including it)."""
+    if max_batch < 1:
+        raise ValueError("max_batch must be >= 1")
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket that fits ``n`` samples (``n`` <= max(buckets))."""
+    for b in sorted(buckets):
+        if b >= n:
+            return b
+    raise ValueError(f"group of {n} exceeds largest bucket {max(buckets)}")
+
+
+def pad_group(xs: List[np.ndarray], bucket: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack samples (each (N,)) into a (bucket, N) batch + validity mask."""
+    n = len(xs)
+    x = np.zeros((bucket, xs[0].shape[-1]), np.float32)
+    x[:n] = np.stack(xs).astype(np.float32)
+    valid = np.zeros((bucket,), np.float32)
+    valid[:n] = 1.0
+    return x, valid
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted inference request."""
+
+    id: int
+    x: np.ndarray                 # (N,) encoded input rates
+    enqueue_t: float
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: Optional[Any] = None  # ServeResult once completed
+    error: Optional[BaseException] = None
+
+
+class MicroBatcher:
+    """Admission queue that hands the engine bucket-sized request groups."""
+
+    def __init__(self, buckets: Sequence[int], max_wait_s: float = 2e-3):
+        self.buckets = tuple(sorted(buckets))
+        self.max_batch = self.buckets[-1]
+        self.max_wait_s = max_wait_s
+        self._q: "queue.Queue[Request]" = queue.Queue()
+
+    def put(self, req: Request) -> None:
+        self._q.put(req)
+
+    def depth(self) -> int:
+        return self._q.qsize()
+
+    def next_group(self, timeout_s: float = 0.05) -> List[Request]:
+        """Block up to ``timeout_s`` for the first request, then drain the
+        queue for at most ``max_wait_s`` more or until the largest bucket
+        fills.  Returns [] on timeout (lets the engine poll its stop flag
+        and fold pending online-learning feedback between batches)."""
+        try:
+            first = self._q.get(timeout=timeout_s)
+        except queue.Empty:
+            return []
+        group = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(group) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                # past the window: keep only what is already queued
+                try:
+                    group.append(self._q.get_nowait())
+                    continue
+                except queue.Empty:
+                    break
+            try:
+                group.append(self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return group

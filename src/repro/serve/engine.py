@@ -1,0 +1,251 @@
+"""BCPNNService — the streaming serving engine for trained DeepStates.
+
+One worker thread owns the network state and drains the admission queue
+into shape-bucketed microbatches (batching.py), running the inference-only
+path (``core.network.infer``) per bucket — each bucket shape compiles once
+and is reused forever, the jax analogue of the paper's pre-synthesized
+inference bitstream.  With ``online_learning=True`` the engine also owns a
+feedback buffer of labeled samples and folds it into the readout
+projection via ``supervised_readout_step`` *between* inference
+microbatches: the same deployment serves traffic and keeps learning from a
+label stream, the runtime-selectable analogue of the follow-up paper's
+inference-vs-training reconfiguration (no reflash — just a flag).
+
+Thread model: ``submit``/``feedback`` may be called from any thread (they
+only enqueue host arrays); all device work — inference and learning —
+happens on the single worker thread, so the state needs no lock and
+learning can never race an in-flight forward pass.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.network import as_spec, infer, supervised_readout_step
+from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
+from .metrics import ServeMetrics
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Completed inference for one request."""
+
+    request_id: int
+    probs: np.ndarray   # (n_classes,)
+    pred: int
+    latency_ms: float
+
+
+class BCPNNService:
+    """Microbatched streaming front-end over a trained ``DeepState``.
+
+    API: ``submit`` (async admission) + ``result`` (blocking collect),
+    ``classify`` (synchronous convenience), ``feedback`` (labeled sample
+    for the online-learning mode), ``metrics`` (aggregate snapshot).
+    """
+
+    def __init__(self, state, spec_or_cfg, max_batch: int = 64,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_wait_ms: float = 2.0, online_learning: bool = False,
+                 feedback_batch: int = 32, metrics_window: int = 4096,
+                 poll_ms: float = 20.0, result_retention: int = 4096):
+        self.spec = as_spec(spec_or_cfg)
+        self.state = state
+        self.online_learning = online_learning
+        self.feedback_batch = feedback_batch
+        self._poll_s = poll_ms * 1e-3
+        self._batcher = MicroBatcher(buckets or default_buckets(max_batch),
+                                     max_wait_s=max_wait_ms * 1e-3)
+        self.metrics = ServeMetrics(window=metrics_window)
+        spec = self.spec
+        self._infer_fn = jax.jit(
+            lambda st, x, v: infer(st, spec, x, valid=v))
+        self._learn_fn = jax.jit(
+            lambda st, x, y: supervised_readout_step(st, spec, x, y))
+        self._feedback: collections.deque = collections.deque()
+        self._feedback_lock = threading.Lock()
+        self._requests: Dict[int, Request] = {}
+        self._requests_lock = threading.Lock()
+        # Completed-but-uncollected results are retained for the most
+        # recent ``result_retention`` requests only; older ones are
+        # evicted so fire-and-forget submitters cannot grow the registry
+        # without bound.  Collect promptly (result() frees the slot).
+        self.result_retention = result_retention
+        self._done_ids: collections.deque = collections.deque()
+        self._next_id = 0
+        self._stop = threading.Event()
+        # Admission gate: submit()/feedback() enqueue under this lock and
+        # stop() sets the stop flag under it, so every enqueue strictly
+        # precedes the flag flip — the worker can then treat "stop set +
+        # queues empty" as "everything admitted is done" with no window
+        # for a straggler to land in a dead queue.
+        self._admit_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+
+    # ---------------------------------------------------------- lifecycle --
+    def start(self, warmup: bool = True) -> "BCPNNService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        if warmup:
+            self.warmup()
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="bcpnn-serve")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain: the worker finishes everything already admitted (requests
+        and feedback) before exiting; admissions racing stop() either land
+        before the flag flips (and are served) or raise."""
+        if self._thread is None:
+            return
+        with self._admit_lock:
+            self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def warmup(self) -> None:
+        """Pre-compile every bucket shape (and the learn shape) so no
+        request pays a compile on the serving path."""
+        ni = self.spec.input_geom.N
+        for b in self._batcher.buckets:
+            probs, _ = self._infer_fn(self.state,
+                                      jnp.zeros((b, ni), jnp.float32),
+                                      jnp.zeros((b,), jnp.float32))
+            jax.block_until_ready(probs)
+        if self.online_learning:
+            st = self._learn_fn(self.state,
+                                jnp.zeros((self.feedback_batch, ni),
+                                          jnp.float32),
+                                jnp.zeros((self.feedback_batch,), jnp.int32))
+            jax.block_until_ready(st.readout.w)  # discard: compile only
+
+    # ---------------------------------------------------------- front-end --
+    def submit(self, x: np.ndarray) -> int:
+        """Admit one sample ((N,) encoded rates); returns a request id."""
+        with self._admit_lock:
+            if self._thread is None or self._stop.is_set():
+                raise RuntimeError("service is not running")
+            with self._requests_lock:
+                rid = self._next_id
+                self._next_id += 1
+                req = Request(id=rid, x=np.asarray(x, np.float32),
+                              enqueue_t=time.perf_counter())
+                self._requests[rid] = req
+            self.metrics.record_submit()
+            self._batcher.put(req)
+        return rid
+
+    def result(self, request_id: int, timeout: Optional[float] = None) -> ServeResult:
+        """Block until ``request_id`` completes and return its result.
+
+        The id is forgotten on return AND on timeout — a timed-out request
+        still executes (its work is already admitted) but the result is
+        discarded, so abandoned requests cannot leak registry entries.
+        """
+        with self._requests_lock:
+            req = self._requests[request_id]
+        try:
+            if not req.done.wait(timeout):
+                raise TimeoutError(f"request {request_id} not done "
+                                   f"within {timeout}s")
+        finally:
+            with self._requests_lock:
+                self._requests.pop(request_id, None)
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    def classify(self, x: np.ndarray, timeout: Optional[float] = None) -> ServeResult:
+        """Synchronous convenience: submit + wait."""
+        return self.result(self.submit(x), timeout=timeout)
+
+    def feedback(self, x: np.ndarray, label: int) -> None:
+        """Queue one labeled sample for the online-learning mode."""
+        if not self.online_learning:
+            raise RuntimeError("service was built with online_learning=False")
+        with self._admit_lock:
+            if self._thread is None or self._stop.is_set():
+                raise RuntimeError("service is not running")
+            with self._feedback_lock:
+                self._feedback.append((np.asarray(x, np.float32), int(label)))
+
+    def queue_depth(self) -> int:
+        return self._batcher.depth()
+
+    def snapshot(self) -> Dict[str, float]:
+        return self.metrics.snapshot(queue_depth=self.queue_depth())
+
+    # ------------------------------------------------------------- worker --
+    def _run(self) -> None:
+        while True:
+            group = self._batcher.next_group(timeout_s=self._poll_s)
+            if group:
+                self._execute(group)
+            if self.online_learning:
+                # Fold between microbatches: immediately when a full learn
+                # batch is buffered, opportunistically when idle.
+                self._fold_feedback(force=not group)
+            if self._stop.is_set() and not group \
+                    and self._batcher.depth() == 0:
+                while self.online_learning and self._feedback:
+                    # flush the WHOLE buffer, one learn batch at a time
+                    self._fold_feedback(force=True)
+                return
+
+    def _execute(self, group) -> None:
+        bucket = pick_bucket(len(group), self._batcher.buckets)
+        x, valid = pad_group([r.x for r in group], bucket)
+        try:
+            probs, pred = self._infer_fn(self.state, jnp.asarray(x),
+                                         jnp.asarray(valid))
+            probs = np.asarray(probs)
+            pred = np.asarray(pred)
+        except Exception as e:  # complete exceptionally, keep serving
+            for r in group:
+                r.error = e
+                r.done.set()
+            return
+        t_done = time.perf_counter()
+        self.metrics.record_batch(n_valid=len(group), bucket=bucket)
+        for i, r in enumerate(group):
+            r.result = ServeResult(request_id=r.id, probs=probs[i],
+                                   pred=int(pred[i]),
+                                   latency_ms=(t_done - r.enqueue_t) * 1e3)
+            self.metrics.record_complete(t_done - r.enqueue_t)
+            r.done.set()
+            self._done_ids.append(r.id)
+        while len(self._done_ids) > self.result_retention:
+            stale = self._done_ids.popleft()  # usually already collected
+            with self._requests_lock:
+                self._requests.pop(stale, None)
+
+    def _fold_feedback(self, force: bool = False) -> None:
+        """One ``supervised_readout_step`` on up to ``feedback_batch``
+        buffered labeled samples.  Short groups are padded by CYCLING the
+        genuine samples (every row stays real data, so the batch-mean trace
+        update needs no mask — padding only reweights within the batch),
+        keeping a single compiled learn shape."""
+        with self._feedback_lock:
+            if not self._feedback:
+                return
+            if len(self._feedback) < self.feedback_batch and not force:
+                return
+            items = [self._feedback.popleft()
+                     for _ in range(min(len(self._feedback),
+                                        self.feedback_batch))]
+        n = len(items)
+        idx = [i % n for i in range(self.feedback_batch)]
+        x = np.stack([items[i][0] for i in idx]).astype(np.float32)
+        y = np.asarray([items[i][1] for i in idx], np.int32)
+        self.state = self._learn_fn(self.state, jnp.asarray(x),
+                                    jnp.asarray(y))
+        self.metrics.record_learn(n)

@@ -1,0 +1,84 @@
+"""Synthetic open-loop load generator for the serving engine.
+
+Open loop means arrivals follow their own clock (Poisson at a target
+rate), never waiting for responses — the honest way to measure a serving
+system, since closed-loop generators self-throttle and hide queueing
+collapse.  Each tick submits one sample from a pool; optionally a labeled
+feedback sample rides along (the online-learning stream), emulating
+deployed traffic where a fraction of predictions later gets ground truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .engine import BCPNNService, ServeResult
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """Outcome of one open-loop run."""
+
+    results: List[ServeResult]   # in submission order
+    labels: np.ndarray           # (n,) ground truth per request
+    wall_s: float
+    offered_rate_hz: float
+
+    @property
+    def achieved_rate_hz(self) -> float:
+        return len(self.results) / max(self.wall_s, 1e-9)
+
+    def accuracy(self, lo: float = 0.0, hi: float = 1.0) -> float:
+        """Accuracy of the served predictions over the [lo, hi) fraction
+        of the request stream (e.g. (0, .5) vs (.5, 1) shows online
+        learning improving the stream as it runs)."""
+        n = len(self.results)
+        a, b = int(lo * n), max(int(lo * n) + 1, int(hi * n))
+        pred = np.asarray([r.pred for r in self.results[a:b]])
+        return float(np.mean(pred == self.labels[a:b]))
+
+
+def run_open_loop(
+    service: BCPNNService,
+    x_pool: np.ndarray,
+    y_pool: np.ndarray,
+    n_requests: int,
+    rate_hz: float,
+    seed: int = 0,
+    feedback_frac: float = 0.0,
+    fb_x: Optional[np.ndarray] = None,
+    fb_y: Optional[np.ndarray] = None,
+    timeout_s: float = 120.0,
+) -> LoadReport:
+    """Submit ``n_requests`` samples (drawn with replacement from the
+    pool) at Poisson-``rate_hz``, then collect every result.
+
+    With ``feedback_frac > 0`` each tick also submits, with that
+    probability, one labeled sample from the feedback pool (defaults to
+    the request pool) — the label stream the online-learning mode folds
+    into the readout while inference traffic keeps flowing.
+    """
+    rng = np.random.default_rng(seed)
+    picks = rng.integers(0, len(x_pool), size=n_requests)
+    waits = rng.exponential(1.0 / max(rate_hz, 1e-9), size=n_requests)
+    fb_x = x_pool if fb_x is None else fb_x
+    fb_y = y_pool if fb_y is None else fb_y
+    ids: List[int] = []
+    t0 = time.perf_counter()
+    next_t = t0
+    for k, i in enumerate(picks):
+        next_t += waits[k]
+        delay = next_t - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        ids.append(service.submit(x_pool[i]))
+        if feedback_frac > 0 and rng.random() < feedback_frac:
+            j = rng.integers(0, len(fb_x))
+            service.feedback(fb_x[j], int(fb_y[j]))
+    results = [service.result(rid, timeout=timeout_s) for rid in ids]
+    wall = time.perf_counter() - t0
+    return LoadReport(results=results, labels=y_pool[picks].astype(np.int64),
+                      wall_s=wall, offered_rate_hz=rate_hz)

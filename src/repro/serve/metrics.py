@@ -1,0 +1,85 @@
+"""Serving metrics: per-request latency records + aggregate snapshots.
+
+The registry is written from two sides — the front-end thread records
+admissions, the engine worker records batch executions, completions and
+learn steps — so every mutation takes the lock.  Latencies are kept in a
+bounded ring (last ``window`` requests); percentiles are computed on
+demand from that ring, which is the usual serving-telemetry trade-off
+(exact recent-window percentiles, O(window) memory).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class ServeMetrics:
+    """Thread-safe aggregate metrics for one serving engine."""
+
+    def __init__(self, window: int = 4096):
+        self._lock = threading.Lock()
+        self._lat_s = collections.deque(maxlen=window)
+        self.submitted = 0
+        self.completed = 0
+        self.batches = 0
+        self.occupied_slots = 0   # genuine samples across all batches
+        self.padded_slots = 0     # pad slots across all batches
+        self.learn_steps = 0
+        self.learn_samples = 0
+        self._t_start: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------ record --
+    def record_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.submitted += n
+            if self._t_start is None:
+                self._t_start = time.perf_counter()
+
+    def record_batch(self, n_valid: int, bucket: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.occupied_slots += n_valid
+            self.padded_slots += bucket - n_valid
+
+    def record_complete(self, latency_s: float) -> None:
+        with self._lock:
+            self.completed += 1
+            self._lat_s.append(latency_s)
+            self._t_last = time.perf_counter()
+
+    def record_learn(self, n_samples: int) -> None:
+        with self._lock:
+            self.learn_steps += 1
+            self.learn_samples += n_samples
+
+    # ---------------------------------------------------------- snapshot --
+    def snapshot(self, queue_depth: int = 0) -> Dict[str, float]:
+        """Aggregate view: throughput over the active window, latency
+        percentiles over the recent ring, batching efficiency."""
+        with self._lock:
+            lat = np.asarray(self._lat_s, np.float64)
+            elapsed = ((self._t_last - self._t_start)
+                       if self._t_start is not None and self._t_last is not None
+                       else 0.0)
+            slots = self.occupied_slots + self.padded_slots
+            out = {
+                "submitted": float(self.submitted),
+                "completed": float(self.completed),
+                "queue_depth": float(queue_depth),
+                "batches": float(self.batches),
+                "batch_occupancy": (self.occupied_slots / slots
+                                    if slots else 0.0),
+                "learn_steps": float(self.learn_steps),
+                "learn_samples": float(self.learn_samples),
+                "images_per_s": (self.completed / elapsed
+                                 if elapsed > 0 else 0.0),
+            }
+        for name, q in (("p50_ms", 50), ("p90_ms", 90), ("p99_ms", 99)):
+            out[name] = float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
+        out["mean_ms"] = float(lat.mean() * 1e3) if lat.size else 0.0
+        return out

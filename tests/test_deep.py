@@ -22,6 +22,8 @@ from repro.core import (
     supervised_readout_step,
     unsupervised_layer_step,
 )
+from repro.core.bcpnn_layer import Projection, rewire, topk_mask
+from repro.core.traces import init_traces, weights_from_traces
 from repro.data.synthetic import encode_images, make_synthetic
 
 
@@ -95,6 +97,57 @@ def test_backend_parity_deep_stack_protocol():
     for a, b in zip(jax.tree.leaves(st_j), jax.tree.leaves(st_p)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=2e-4)
+
+
+# ------------------------------------------------- exact-nact mask budget --
+
+def test_rewire_exact_nact_with_tied_mi():
+    """Regression: early in training many HC pairs share identical ~0 MI;
+    a threshold mask admitted every tie and blew the nact budget.  With
+    noiseless uniform traces ALL MI scores tie, the worst case."""
+    spec = ProjSpec(LayerGeom(10, 2), LayerGeom(5, 4), nact=3)
+    tr = init_traces(spec.pre.N, spec.post.N, 2, 4)  # no key -> exact ties
+    w, b = weights_from_traces(tr)
+    proj = Projection(traces=tr, w=w, b=b,
+                      mask=jnp.ones((10, 5), jnp.float32))
+    out = rewire(proj, spec)
+    np.testing.assert_array_equal(np.asarray(out.mask).sum(0), 3.0)
+    # the masked weights honor the shrunk mask
+    dead = np.asarray(out.w)[np.repeat(np.asarray(out.mask) == 0, 2, axis=0)
+                             .repeat(4, axis=1)]
+    np.testing.assert_array_equal(dead, 0.0)
+
+
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_topk_mask_always_exact(k):
+    for seed in range(5):
+        scores = jax.random.normal(jax.random.PRNGKey(seed), (7, 4))
+        # quantize to force frequent ties
+        scores = jnp.round(scores)
+        m = topk_mask(scores, k)
+        np.testing.assert_array_equal(np.asarray(m).sum(0), float(k))
+        assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_patchy_budget_exact_under_learn_and_rewire(backend):
+    """The connectivity budget is exactly min(nact, H_pre) per post-HC at
+    init, after chained learn steps, and after rewire — on both backends."""
+    spec = ProjSpec(LayerGeom(9, 2), LayerGeom(4, 8), alpha=0.1, nact=5,
+                    backend=backend)
+    proj = init_projection(spec, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(proj.mask).sum(0), 5.0)
+    for k in jax.random.split(jax.random.PRNGKey(1), 3):
+        x = jax.random.uniform(k, (8, spec.pre.N))
+        h = forward(proj, spec, x)
+        proj = learn(proj, spec, x, h)
+        np.testing.assert_array_equal(np.asarray(proj.mask).sum(0), 5.0)
+    out = rewire(proj, spec)
+    np.testing.assert_array_equal(np.asarray(out.mask).sum(0), 5.0)
+    # nact >= H_pre degenerates to dense = min(nact, H_pre) active
+    dense_spec = ProjSpec(LayerGeom(4, 2), LayerGeom(2, 4), nact=9)
+    dense = init_projection(dense_spec, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(dense.mask).sum(0), 4.0)
 
 
 # ----------------------------------------------------------- deep engine --

@@ -79,3 +79,42 @@ def test_kernel_odd_tile_boundaries():
     """Shapes that don't align to the default blocks (block clamping)."""
     got = hc_softmax(jnp.ones((4, 6 * 10)), 6, 10, block_b=128, block_h=8)
     np.testing.assert_allclose(np.asarray(got), 0.1, atol=1e-6)
+
+
+@pytest.mark.parametrize("nact", [None, 4])
+def test_learn_parity_across_bias_correction_crossover(nact):
+    """fused_learn must match _learn_jnp on BOTH sides of the effective-
+    smoothing crossover: while young the trace update is a running mean
+    (a = 1/(t+1) > alpha), past t > 1/alpha it is the fixed-alpha EMA.
+    With alpha=0.25 the crossover sits at t=4, so 10 chained steps cross
+    it mid-run; every step is compared on traces, weights and bias."""
+    from repro.core.bcpnn_layer import _learn_jnp
+
+    spec = ProjSpec(LayerGeom(12, 2), LayerGeom(4, 8), alpha=0.25, nact=nact)
+    proj_j = init_projection(spec, jax.random.PRNGKey(0))
+    proj_f = jax.tree.map(jnp.array, proj_j)
+    keys = jax.random.split(jax.random.PRNGKey(1), 10)
+    crossed = False
+    for k in keys:
+        kx, ky = jax.random.split(k)
+        x = jax.random.uniform(kx, (16, spec.pre.N))
+        y = jax.random.uniform(ky, (16, spec.post.N))
+        proj_j = _learn_jnp(proj_j, spec, x, y)
+        proj_f = fused_learn(proj_f, spec, x, y)
+        t = int(proj_j.traces.t)
+        crossed = crossed or (1.0 / t < spec.alpha if t else False)
+        np.testing.assert_allclose(np.asarray(proj_f.traces.pij),
+                                   np.asarray(proj_j.traces.pij),
+                                   atol=1e-6, err_msg=f"pij diverged at t={t}")
+        np.testing.assert_allclose(np.asarray(proj_f.traces.pi),
+                                   np.asarray(proj_j.traces.pi), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(proj_f.traces.pj),
+                                   np.asarray(proj_j.traces.pj), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(proj_f.w), np.asarray(proj_j.w),
+                                   atol=1e-4, err_msg=f"w diverged at t={t}")
+        np.testing.assert_allclose(np.asarray(proj_f.b), np.asarray(proj_j.b),
+                                   atol=1e-6)
+    assert crossed, "sweep never left the bias-correction regime"
+    if nact is not None:  # patchy invariant holds through both regimes
+        for p in (proj_j, proj_f):
+            assert np.all(np.asarray(p.mask).sum(0) == nact)

@@ -107,6 +107,24 @@ def test_adamw_moves_params_finite(seed, lr):
 
 
 @settings(**COMMON)
+@given(hi=st.integers(1, 24), hj=st.integers(1, 8), k=st.integers(1, 30),
+       quant=st.sampled_from([None, 1.0, 4.0]), seed=st.integers(0, 1000))
+def test_topk_mask_exact_budget(hi, hj, k, quant, seed):
+    """The patchy-connectivity mask must hold exactly min(k, Hi) pre-HCs
+    per post-HC for ANY score matrix — including heavily tied scores
+    (quantized), the case a threshold-based mask over-admits on."""
+    from repro.core.bcpnn_layer import topk_mask
+
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (hi, hj))
+    if quant is not None:
+        scores = jnp.round(scores * quant) / quant
+    kk = min(k, hi)
+    m = np.asarray(topk_mask(scores, kk))
+    np.testing.assert_array_equal(m.sum(0), float(kk))
+    assert set(np.unique(m)) <= {0.0, 1.0}
+
+
+@settings(**COMMON)
 @given(seed=st.integers(0, 100))
 def test_grad_compression_error_feedback_bounded(seed):
     """Quantize->dequantize with error feedback: per-step error is bounded

@@ -1,0 +1,247 @@
+"""Serving-engine tests: bucketed microbatching, padded-batch parity with
+direct inference, async submit/result, online learning from the feedback
+stream, and the padded-evaluation / masked-infer mechanics it rides on."""
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.bcpnn_models import deep_synth_spec
+from repro.core import (
+    Trainer, infer, init_deep, init_projection, spec_from_dict, spec_to_dict,
+)
+from repro.data.synthetic import encode_images, make_synthetic
+from repro.serve import (
+    BCPNNService, default_buckets, pad_group, pick_bucket, run_open_loop,
+)
+
+
+def _small_net(depth=1, backend="jnp", seed=0, side=6, n_classes=3):
+    spec = deep_synth_spec(side=side, depth=depth, n_classes=n_classes,
+                           hidden_hc=4, hidden_mc=8, backend=backend)
+    return spec, init_deep(spec, jax.random.PRNGKey(seed))
+
+
+# ------------------------------------------------------------- batching --
+
+def test_default_buckets_and_pick():
+    assert default_buckets(16) == (1, 2, 4, 8, 16)
+    assert default_buckets(12) == (1, 2, 4, 8, 12)
+    assert pick_bucket(3, (1, 2, 4, 8)) == 4
+    assert pick_bucket(8, (1, 2, 4, 8)) == 8
+    with pytest.raises(ValueError):
+        pick_bucket(9, (1, 2, 4, 8))
+
+
+def test_pad_group_shapes_and_mask():
+    xs = [np.full((5,), i, np.float32) for i in range(3)]
+    x, valid = pad_group(xs, 8)
+    assert x.shape == (8, 5) and valid.shape == (8,)
+    np.testing.assert_array_equal(valid, [1, 1, 1, 0, 0, 0, 0, 0])
+    np.testing.assert_array_equal(x[3:], 0.0)
+    np.testing.assert_array_equal(x[1], 1.0)
+
+
+def test_infer_valid_mask_makes_pad_rows_inert():
+    spec, state = _small_net()
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, spec.input_geom.N))
+    valid = jnp.array([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+    probs_m, pred_m = infer(state, spec, x, valid=valid)
+    probs, pred = infer(state, spec, x[:5])
+    # genuine rows unchanged vs the unpadded call...
+    np.testing.assert_allclose(np.asarray(probs_m)[:5], np.asarray(probs),
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pred_m)[:5], np.asarray(pred))
+    # ...pad rows visibly inert
+    np.testing.assert_array_equal(np.asarray(pred_m)[5:], -1)
+    np.testing.assert_array_equal(np.asarray(probs_m)[5:], 0.0)
+
+
+# --------------------------------------------------------------- engine --
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_served_results_match_direct_infer(backend):
+    """A request served through a padded shape bucket must equal the
+    direct unbatched infer — padding can never leak into results."""
+    spec, state = _small_net(backend=backend)
+    xs = np.asarray(jax.random.uniform(jax.random.PRNGKey(2),
+                                       (5, spec.input_geom.N)))
+    svc = BCPNNService(state, spec, max_batch=8).start()
+    try:
+        got = [svc.classify(x) for x in xs]  # singles -> bucket 1 or padded
+        ids = [svc.submit(x) for x in xs]    # burst -> one padded bucket
+        got += [svc.result(i, timeout=30) for i in ids]
+    finally:
+        svc.stop()
+    probs_ref, pred_ref = infer(state, spec, jnp.asarray(xs))
+    for k, r in enumerate(got):
+        i = k % 5
+        assert r.pred == int(pred_ref[i])
+        np.testing.assert_allclose(r.probs, np.asarray(probs_ref)[i],
+                                   atol=1e-5)
+        assert r.latency_ms >= 0.0
+
+
+def test_async_submit_from_many_threads_all_complete():
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=8).start()
+    ids = []
+    lock = threading.Lock()
+    x = np.ones((spec.input_geom.N,), np.float32)
+
+    def client(n):
+        for _ in range(n):
+            rid = svc.submit(x)
+            with lock:
+                ids.append(rid)
+
+    threads = [threading.Thread(target=client, args=(10,)) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    results = [svc.result(rid, timeout=30) for rid in ids]
+    svc.stop()
+    assert len(results) == 40
+    assert len({r.request_id for r in results}) == 40
+    snap = svc.snapshot()
+    assert snap["completed"] == snap["submitted"] == 40
+    assert snap["queue_depth"] == 0
+    assert 0 < snap["p50_ms"] <= snap["p99_ms"]
+    assert 0 < snap["batch_occupancy"] <= 1
+
+
+def test_feedback_requires_online_mode():
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=4)
+    with pytest.raises(RuntimeError, match="online_learning"):
+        svc.feedback(np.zeros((spec.input_geom.N,), np.float32), 0)
+    with pytest.raises(RuntimeError, match="not running"):
+        svc.submit(np.zeros((spec.input_geom.N,), np.float32))
+
+
+def test_stop_racing_submits_never_strands_a_request():
+    """Admissions racing stop() must either raise or be served — a
+    successfully-submitted id always resolves (no forever-pending slot)."""
+    spec, state = _small_net()
+    x = np.ones((spec.input_geom.N,), np.float32)
+    for trial in range(3):
+        svc = BCPNNService(state, spec, max_batch=4, max_wait_ms=0.5)
+        svc.start(warmup=(trial == 0))
+        ids, done = [], threading.Event()
+        lock = threading.Lock()
+
+        def client():
+            while not done.is_set():
+                try:
+                    rid = svc.submit(x)
+                except RuntimeError:
+                    return  # stopped: admission correctly refused
+                with lock:
+                    ids.append(rid)
+
+        threads = [threading.Thread(target=client) for _ in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(0.02)
+        svc.stop()
+        done.set()
+        for t in threads:
+            t.join()
+        for rid in ids:  # every admitted request must have completed
+            r = svc.result(rid, timeout=10)
+            assert r.pred >= 0
+        assert len(svc._requests) == 0  # registry fully drained
+
+
+def test_stop_drains_entire_feedback_buffer():
+    """Regression: stop() must flush ALL buffered feedback (one learn
+    batch at a time), not just one fold — a bursty label stream must not
+    lose its tail at shutdown."""
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=4, online_learning=True,
+                       feedback_batch=16).start()
+    x = np.ones((spec.input_geom.N,), np.float32)
+    for i in range(100):
+        svc.feedback(x, i % 3)
+    svc.stop()
+    snap = svc.snapshot()
+    assert snap["learn_samples"] == 100, snap
+    assert snap["learn_steps"] >= 100 // 16
+    assert len(svc._feedback) == 0
+    with pytest.raises(RuntimeError, match="not running"):
+        svc.feedback(x, 0)
+
+
+def test_online_learning_improves_readout_under_traffic():
+    """Cold readout + feedback stream: served accuracy and eval accuracy
+    must rise while every inference request still completes."""
+    ds = make_synthetic(768, 256, 8, 4, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec = deep_synth_spec(side=8, depth=2, n_classes=4, hidden_hc=8,
+                           hidden_mc=16)
+    tr = Trainer(spec, seed=0)
+    tr.fit(xt, ds.y_train, epochs=6, batch=64)
+    assert tr.evaluate(xe, ds.y_test, batch=64) > 0.4  # sane baseline
+    acc_trained = tr.evaluate(xe, ds.y_test, batch=64)
+    cold = dataclasses.replace(
+        tr.state, readout=init_projection(spec.readout,
+                                          jax.random.PRNGKey(7)))
+    svc = BCPNNService(cold, spec, max_batch=8, online_learning=True,
+                       feedback_batch=16).start()
+    rep = run_open_loop(svc, xe, ds.y_test, n_requests=160, rate_hz=800,
+                        seed=2, feedback_frac=1.0, fb_x=xt, fb_y=ds.y_train)
+    svc.stop()
+    snap = svc.snapshot()
+    assert snap["completed"] == 160, "online learning dropped requests"
+    assert snap["learn_steps"] > 0
+    tr.state = svc.state
+    acc_online = tr.evaluate(xe, ds.y_test, batch=64)
+    tr.state = cold
+    acc_cold = tr.evaluate(xe, ds.y_test, batch=64)
+    assert acc_online > acc_cold + 0.1, (acc_cold, acc_online)
+    # the relearned readout should approach the offline-trained baseline
+    assert acc_online > acc_trained - 0.25, (acc_trained, acc_online)
+    assert len(rep.results) == 160
+
+
+# ------------------------------------------------- padded eval + ckpt ----
+
+def test_trainer_evaluate_covers_full_eval_set():
+    """evaluate() must score every sample: a tail smaller than the batch
+    is padded + masked, not dropped, and matches a predict()-based count."""
+    ds = make_synthetic(256, 100, 6, 3, seed=1)  # 100 % 64 != 0
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec = deep_synth_spec(side=6, depth=1, n_classes=3, hidden_hc=4,
+                           hidden_mc=8)
+    tr = Trainer(spec, seed=0)
+    tr.fit(xt, ds.y_train, epochs=1, batch=64)
+    acc = tr.evaluate(xe, ds.y_test, batch=64)
+    ref = float(np.mean(tr.predict(xe) == ds.y_test))
+    assert acc == pytest.approx(ref, abs=1e-6)
+    # smaller-than-one-batch eval sets must work too
+    acc_small = tr.evaluate(xe[:10], ds.y_test[:10], batch=64)
+    ref_small = float(np.mean(tr.predict(xe[:10]) == ds.y_test[:10]))
+    assert acc_small == pytest.approx(ref_small, abs=1e-6)
+
+
+def test_spec_roundtrip_and_checkpoint_extra(tmp_path):
+    spec = deep_synth_spec(side=6, depth=2, n_classes=3, hidden_hc=4,
+                           hidden_mc=8, nact=[9, None], backend="pallas")
+    assert spec_from_dict(spec_to_dict(spec)) == spec
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, state, blocking=True, extra={"spec": spec_to_dict(spec)})
+    spec2 = spec_from_dict(mgr.read_extra(3)["spec"])
+    assert spec2 == spec
+    restored = mgr.restore(3, init_deep(spec2, jax.random.PRNGKey(1)))
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert mgr.read_extra(3) is not None
+    mgr.save(4, state, blocking=True)
+    assert mgr.read_extra(4) is None

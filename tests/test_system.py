@@ -50,6 +50,24 @@ def test_serve_driver_end_to_end():
     assert "decode" in r.stdout
 
 
+@pytest.mark.slow
+def test_serve_bcpnn_driver_end_to_end(tmp_path):
+    """The BCPNN serving driver: train -> checkpoint -> restore -> serve ->
+    online-learn, with its own smoke assertions (latency report, no drops,
+    measurable readout improvement)."""
+    r = _run([sys.executable, "-m", "repro.launch.serve_bcpnn", "--smoke",
+              "--ckpt-dir", str(tmp_path / "ckpt")])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "smoke OK" in r.stdout
+    assert "p99" in r.stdout
+    # a second run must RESTORE the checkpoint rather than retrain
+    r2 = _run([sys.executable, "-m", "repro.launch.serve_bcpnn", "--smoke",
+               "--ckpt-dir", str(tmp_path / "ckpt"), "--no-online"])
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "no checkpoint" not in r2.stdout
+    assert "restored step" in r2.stdout
+
+
 def test_checkpoint_roundtrip_and_retention(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep_last=2)
     tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
