@@ -1,0 +1,149 @@
+"""Kernel-level BENCH: masked-dense (jnp) vs padded-aligned Pallas vs
+patchy-sparse Pallas, per model geometry.
+
+Times one projection's hot-path pair — activation (forward) and
+plasticity (learn) — under the three execution schedules the codebase
+offers (DESIGN.md §3/§7):
+
+  * ``jnp_dense``      — the XLA reference: dense matmul over the masked
+                         weights, dense trace EMA + mask multiply;
+  * ``pallas_padded``  — the fused dense kernels on pad-to-aligned tiles
+                         (the pre-patchy production path);
+  * ``pallas_patchy``  — the compact patchy kernels streaming only the
+                         nact live pre-blocks per post-HC
+                         (``patchy_traces`` plasticity semantics).
+
+Emits ``name,value,unit`` CSV rows plus a ``BENCH_kernels.json`` dump so
+the perf trajectory has machine-readable data points.  By default the
+paper geometries are scaled down by ``--scale`` (the CPU interpreter pays
+per-tile Python overhead; the nact/Hi sparsity ratio is preserved, so the
+patchy-vs-dense proportionality claim is still measured); pass
+``--scale 1`` on real hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcpnn_layer import (
+    ProjSpec, forward, init_projection, learn,
+)
+from repro.core.hypercolumns import LayerGeom
+from repro.kernels import fused_forward, fused_learn
+from repro.kernels.ops import bcpnn_fwd
+
+MODEL_GEOMS = {
+    "model1-mnist": dict(b=128, hi=28 * 28, mi=2, hj=32, mj=128, nact=128),
+    "model2-pneumonia": dict(b=128, hi=28 * 28, mi=2, hj=32, mj=256, nact=128),
+    "model3-breast": dict(b=128, hi=64 * 64, mi=2, hj=32, mj=128, nact=128),
+}
+
+
+def scale_geom(g: dict, s: int) -> dict:
+    """Shrink a geometry by ~s while preserving the nact/Hi ratio."""
+    if s <= 1:
+        return dict(g)
+    return dict(b=max(32, g["b"] // s), hi=max(8, g["hi"] // s), mi=g["mi"],
+                hj=max(4, g["hj"] // s), mj=max(16, g["mj"] // s),
+                nact=max(2, g["nact"] // s))
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_geometry(name: str, g: dict, iters: int, csv: bool) -> dict:
+    pre = LayerGeom(g["hi"], g["mi"])
+    post = LayerGeom(g["hj"], g["mj"])
+    nact = min(g["nact"], g["hi"])
+    spec_jnp = ProjSpec(pre, post, alpha=1e-2, nact=nact, backend="jnp")
+    spec_patchy = ProjSpec(pre, post, alpha=1e-2, nact=nact,
+                           backend="pallas", patchy_traces=True)
+    spec_dense = dataclasses.replace(spec_patchy, patchy_traces=False)
+    proj = init_projection(spec_jnp, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (g["b"], pre.N))
+    y = forward(proj, spec_jnp, x)
+
+    schedules = {
+        # XLA reference: dense masked matmul + dense EMA with mask multiply
+        "jnp_dense": (
+            jax.jit(lambda p, xb: forward(p, spec_jnp, xb)),
+            jax.jit(lambda p, xb, yb: learn(p, spec_jnp, xb, yb)),
+        ),
+        # fused dense kernels on padded-aligned tiles (mask streamed in);
+        # bcpnn_fwd directly so the nact spec doesn't divert to patchy
+        "pallas_padded": (
+            jax.jit(lambda p, xb: bcpnn_fwd(
+                xb, p.w, p.b, post.H, post.M, spec_jnp.gain)),
+            jax.jit(lambda p, xb, yb: fused_learn(p, spec_dense, xb, yb)),
+        ),
+        # compact patchy kernels: only live pre-blocks stream
+        "pallas_patchy": (
+            jax.jit(lambda p, xb: fused_forward(p, spec_patchy, xb)),
+            jax.jit(lambda p, xb, yb: fused_learn(p, spec_patchy, xb, yb)),
+        ),
+    }
+    row = {"b": g["b"], "ni": pre.N, "nj": post.N, "hi": g["hi"],
+           "nact": nact, "nact_over_hi": nact / g["hi"],
+           # modeled MXU work per step (fwd + learn matmuls, MACs*2):
+           # the dense schedules touch every (Ni, Nj) pair, the patchy
+           # schedule only the nact live pre-blocks — ratio = Hi/nact.
+           "model_flops_dense": 4 * g["b"] * pre.N * post.N,
+           "model_flops_patchy": 4 * g["b"] * nact * g["mi"] * post.N}
+    for sched, (fwd, lrn) in schedules.items():
+        t_f = _time(fwd, proj, x, iters=iters)
+        t_l = _time(lrn, proj, x, y, iters=iters)
+        step = t_f + t_l
+        row[sched] = {"fwd_ms": t_f * 1e3, "learn_ms": t_l * 1e3,
+                      "step_ms": step * 1e3,
+                      "images_per_s": g["b"] / step}
+        if csv:
+            print(f"bench_kernels_{name}_{sched},{step*1e3:.2f},step_ms")
+            print(f"bench_kernels_{name}_{sched},"
+                  f"{g['b']/step:.0f},images_per_s")
+    row["patchy_speedup_vs_padded"] = (
+        row["pallas_padded"]["step_ms"] / row["pallas_patchy"]["step_ms"])
+    if csv:
+        print(f"bench_kernels_{name},"
+              f"{row['patchy_speedup_vs_padded']:.2f},patchy_speedup_x")
+        print(f"bench_kernels_{name},{g['hi']/nact:.2f},hi_over_nact_x")
+    return row
+
+
+def run(csv=True, json_path="BENCH_kernels.json", scale=4, iters=3,
+        models=None):
+    out = {"device": jax.default_backend(), "scale": scale, "geometries": {}}
+    for name in models or MODEL_GEOMS:
+        g = scale_geom(MODEL_GEOMS[name], scale)
+        out["geometries"][name] = bench_geometry(name, g, iters, csv)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        if csv:
+            print(f"bench_kernels_json={json.dumps(out)}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=4,
+                    help="geometry shrink factor (1 = paper scale)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of geometries")
+    ap.add_argument("--json", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    run(scale=args.scale, iters=args.iters, json_path=args.json,
+        models=args.models.split(",") if args.models else None)

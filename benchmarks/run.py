@@ -4,6 +4,8 @@ Prints ``name,value,unit`` CSV rows:
   * bench_bcpnn           — Table 2 latency/accuracy rows (CPU baseline)
   * bench_struct          — Table 2 'struct' rows (on-device rewire cost)
   * bench_stream_vs_seq   — §4.1 sequential vs stream-dataflow
+  * bench_kernels         — dense vs padded vs patchy kernel schedules
+                            (writes BENCH_kernels.json)
   * bench_roofline_bcpnn  — Fig. 6 roofline placement (TPU target)
   * bench_lm_rooflines    — assigned-arch dry-run roofline table
 """
@@ -17,12 +19,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow BCPNN latency benches")
     args = ap.parse_args()
-    from . import (bench_bcpnn, bench_lm_rooflines, bench_roofline_bcpnn,
-                   bench_stream_vs_seq, bench_struct)
+    from . import (bench_bcpnn, bench_kernels, bench_lm_rooflines,
+                   bench_roofline_bcpnn, bench_stream_vs_seq, bench_struct)
     benches = {
         "roofline_bcpnn": bench_roofline_bcpnn.run,
         "lm_rooflines": bench_lm_rooflines.run,
         "stream_vs_seq": bench_stream_vs_seq.run,
+        "kernels": bench_kernels.run,
         "bcpnn": bench_bcpnn.run,
         "struct": bench_struct.run,
     }

@@ -51,6 +51,9 @@ class ProjSpec:
     support_noise: float = 0.0  # exploration noise amplitude (unsup. only)
     noise_steps: int = 0       # anneal horizon in trace updates
     struct_every: int = 0      # rewire period in trace updates (0 = off)
+    patchy_traces: bool = False  # patchy plasticity: silent synapses hold
+    #                              their joint trace instead of tracking the
+    #                              full dense co-activation (DESIGN.md §7)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -72,10 +75,55 @@ class Projection:
     mask: jax.Array  # (Hi, Hj) float {0,1} structural connectivity
 
 
-def _expand_mask(mask: jax.Array, spec: ProjSpec) -> jax.Array:
-    """(Hi, Hj) HC-level mask -> (Ni, Nj) unit-level mask."""
-    m = jnp.repeat(mask, spec.pre.M, axis=0)
-    return jnp.repeat(m, spec.post.M, axis=1)
+def is_patchy(spec: ProjSpec) -> bool:
+    """True when the projection has a binding connectivity budget."""
+    return spec.nact is not None and spec.nact < spec.pre.H
+
+
+def validate_patchy_mask(mask, spec: ProjSpec, where: str = "projection") -> None:
+    """Host-side guard (concrete arrays only — do NOT call under jit):
+    the compact patchy kernels assume the exactly-nact mask invariant
+    (``topk_mask``); a column with MORE live pre-HCs would be silently
+    truncated by the index table.  Masks written by this codebase always
+    satisfy it, but checkpoints predating the exactly-nact fix (or
+    hand-built states) may not — fail loudly at the deployment boundary
+    instead of serving wrong probabilities."""
+    if not is_patchy(spec):
+        return
+    import numpy as np
+    per_col = np.asarray(jax.device_get(mask)).sum(axis=0)
+    if (per_col > spec.nact).any():
+        bad = int(per_col.max())
+        raise ValueError(
+            f"{where}: patchy mask has a column with {bad} active pre-HCs, "
+            f"exceeding nact={spec.nact}; the compact kernels would drop "
+            f"connections. Rebuild the mask with topk_mask (e.g. rewire) "
+            f"before serving.")
+
+
+def apply_hc_mask(w: jax.Array, mask: jax.Array, spec: ProjSpec) -> jax.Array:
+    """Mask a (Ni, Nj) unit matrix with the (Hi, Hj) HC-level mask.
+
+    Broadcast through the (Hi, Mi, Hj, Mj) view instead of materializing a
+    repeated (Ni, Nj) unit mask: XLA fuses the broadcast into the multiply,
+    so no O(Ni·Nj) mask array ever exists — the old ``jnp.repeat`` chain
+    rebuilt one on every learn call.
+    """
+    hi, mi, hj, mj = spec.pre.H, spec.pre.M, spec.post.H, spec.post.M
+    w4 = w.reshape(hi, mi, hj, mj) * mask[:, None, :, None]
+    return w4.reshape(spec.pre.N, spec.post.N)
+
+
+def expand_hc_mask(mask: jax.Array, spec: ProjSpec) -> jax.Array:
+    """(Hi, Hj) HC-level mask -> materialized (Ni, Nj) unit-level mask.
+
+    Only for consumers that need the mask as a standalone operand (the
+    dense update kernel streams it per tile); a single fused broadcast,
+    not the repeat chain.  Everything else should use ``apply_hc_mask``.
+    """
+    hi, mi, hj, mj = spec.pre.H, spec.pre.M, spec.post.H, spec.post.M
+    m4 = jnp.broadcast_to(mask[:, None, :, None], (hi, mi, hj, mj))
+    return m4.reshape(spec.pre.N, spec.post.N)
 
 
 def topk_mask(scores: jax.Array, k: int) -> jax.Array:
@@ -108,7 +156,7 @@ def init_projection(spec: ProjSpec, key: jax.Array) -> Projection:
         scores = jax.random.uniform(key, (spec.pre.H, spec.post.H))
         mask = topk_mask(scores, spec.nact)
     w, b = weights_from_traces(tr, spec.eps)
-    w = w * _expand_mask(mask, spec)
+    w = apply_hc_mask(w, mask, spec)
     return Projection(traces=tr, w=w, b=b, mask=mask)
 
 
@@ -160,8 +208,19 @@ def _forward_jnp(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
 
 def _learn_jnp(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Projection:
     tr = update_traces(proj.traces, x, y, spec.alpha)
+    if is_patchy(spec) and spec.patchy_traces:
+        # Patchy-trace semantics (DESIGN.md §7): silent synapses HOLD their
+        # last joint-trace value rather than tracking the dense
+        # co-activation — the reference for the compact patchy kernel,
+        # which never computes the masked-out pairs at all.
+        hi, mi, hj, mj = spec.pre.H, spec.pre.M, spec.post.H, spec.post.M
+        keep = proj.mask[:, None, :, None] > 0
+        pij = jnp.where(keep, tr.pij.reshape(hi, mi, hj, mj),
+                        proj.traces.pij.reshape(hi, mi, hj, mj))
+        tr = Traces(pi=tr.pi, pj=tr.pj,
+                    pij=pij.reshape(spec.pre.N, spec.post.N), t=tr.t)
     w, b = weights_from_traces(tr, spec.eps)
-    w = w * _expand_mask(proj.mask, spec)
+    w = apply_hc_mask(w, proj.mask, spec)
     return Projection(traces=tr, w=w, b=b, mask=proj.mask)
 
 
@@ -170,7 +229,9 @@ def rewire(proj: Projection, spec: ProjSpec) -> Projection:
     post-HC.  Fully on-device (beyond-paper: the paper did this on the host
     and paid a measured total-time penalty on small datasets).  Cold path:
     runs every ``struct_every`` steps, so it stays pure jnp on both
-    backends."""
+    backends.  The patchy kernels' active-pre-HC index table is derived
+    from ``mask`` on every call (kernels/patchy.py::active_pre_hcs), so the
+    compact layout follows the rewired mask automatically."""
     if spec.nact is None or spec.nact >= spec.pre.H:
         return proj
     mi = mutual_information(
@@ -178,5 +239,5 @@ def rewire(proj: Projection, spec: ProjSpec) -> Projection:
     )  # (Hi, Hj)
     mask = topk_mask(mi, spec.nact)
     w, b = weights_from_traces(proj.traces, spec.eps)
-    w = w * _expand_mask(mask, spec)
+    w = apply_hc_mask(w, mask, spec)
     return Projection(traces=proj.traces, w=w, b=b, mask=mask)

@@ -113,13 +113,15 @@ def make_network_spec(
     support_noise: float = 3.0,
     noise_steps: int = 500,
     struct_every: int = 0,
+    patchy_traces: bool = False,
 ) -> NetworkSpec:
     """Build a NetworkSpec for a stack of ``len(hidden)`` hidden layers.
 
     ``nact`` (optional) gives the patchy-connectivity budget per stack
-    projection (None entries = dense).  The training knobs apply to every
-    stack projection; per-projection overrides go through
-    ``dataclasses.replace`` on the result.
+    projection (None entries = dense); ``patchy_traces`` opts those
+    projections into compact patchy plasticity (DESIGN.md §7).  The
+    training knobs apply to every stack projection; per-projection
+    overrides go through ``dataclasses.replace`` on the result.
     """
     geoms = [_as_geom(input_geom)] + [_as_geom(h) for h in hidden]
     nacts = list(nact) if nact is not None else [None] * (len(geoms) - 1)
@@ -129,7 +131,8 @@ def make_network_spec(
     projs = tuple(
         ProjSpec(pre, post, alpha=alpha, eps=eps, gain=gain, nact=na,
                  backend=backend, support_noise=support_noise,
-                 noise_steps=noise_steps, struct_every=struct_every)
+                 noise_steps=noise_steps, struct_every=struct_every,
+                 patchy_traces=patchy_traces)
         for pre, post, na in zip(geoms[:-1], geoms[1:], nacts)
     )
     readout = ProjSpec(geoms[-1], LayerGeom(1, n_classes), alpha=alpha,
@@ -291,6 +294,7 @@ class BCPNNConfig:
     support_noise: float = 3.0
     noise_steps: int = 500
     backend: str = "jnp"   # backend for both projections
+    patchy_traces: bool = False  # compact patchy plasticity on the ih projection
 
     @property
     def input_geom(self) -> LayerGeom:
@@ -311,7 +315,8 @@ class BCPNNConfig:
                         backend=self.backend,
                         support_noise=self.support_noise,
                         noise_steps=self.noise_steps,
-                        struct_every=self.struct_every)
+                        struct_every=self.struct_every,
+                        patchy_traces=self.patchy_traces)
 
     def ho_spec(self) -> ProjSpec:
         return ProjSpec(self.hidden_geom, self.output_geom, alpha=self.alpha,

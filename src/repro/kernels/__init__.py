@@ -1,8 +1,15 @@
-"""Pallas TPU kernels for the BCPNN hot spots (+ pure-jnp oracles)."""
+"""Pallas TPU kernels for the BCPNN hot spots (+ pure-jnp oracles).
+
+Dense kernels run on pad-to-aligned tiling plans (tiling.py); patchy
+projections stream a compact gathered layout (patchy.py); block sizes
+come from the autotune cache (tuning.py) unless the caller overrides.
+"""
 from .ops import bcpnn_fwd, bcpnn_update, fused_forward, fused_learn, hc_softmax
+from .patchy import active_pre_hcs, patchy_forward, patchy_update
 from .ref import ref_bcpnn_fwd, ref_bcpnn_update, ref_hc_softmax
 
 __all__ = [
     "bcpnn_fwd", "bcpnn_update", "fused_forward", "fused_learn", "hc_softmax",
+    "active_pre_hcs", "patchy_forward", "patchy_update",
     "ref_bcpnn_fwd", "ref_bcpnn_update", "ref_hc_softmax",
 ]

@@ -6,9 +6,11 @@ translation of the paper's stream-dataflow: the FPGA forwards support
 packets from the matmul stage straight into the softmax stage through a
 FIFO; here the MXU accumulator feeds the epilogue in VMEM.
 
-Grid = (B/tb, Nj/tj, Ni/tk) with the contraction innermost; the output
-tile tj must be a multiple of the post-synaptic minicolumn count M so the
-softmax is block-local.
+Grid = (B/tb, Nj/tj, Ni/tk) over the PADDED shapes, contraction
+innermost.  Pad semantics (DESIGN.md §7): batch rows and contraction
+columns pad with zeros (inert in the matmul); the post-synaptic unit axis
+pads HC-aware — extra minicolumn lanes get zero weight columns and
+``NEG`` bias, so they vanish from every real softmax sum.
 """
 from __future__ import annotations
 
@@ -19,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .tiling import fit_block, fit_hc_block
+from .padding import pad_axis, pad_hc_axis, unpad_hc_axis
+from .tiling import NEG, SUBLANE, lane_multiple, pad_hc_spec, pad_spec
 
 
 def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int, n_mc: int, gain: float):
@@ -65,21 +68,26 @@ def bcpnn_fwd_pallas(
     b, ni = x.shape
     nj = w.shape[1]
     assert nj == n_hc * n_mc
-    block_b = fit_block(b, block_b)
-    block_k = fit_block(ni, block_k)
-    block_j = fit_hc_block(n_hc, n_mc, block_j)  # keep HCs whole in a tile
-    k_steps = ni // block_k
-    grid = (b // block_b, nj // block_j, k_steps)
-    return pl.pallas_call(
-        functools.partial(_kernel, k_steps=k_steps, n_mc=n_mc, gain=gain),
+    bs = pad_spec(b, block_b, SUBLANE)
+    ks = pad_spec(ni, block_k, lane_multiple(ni))
+    js = pad_hc_spec(n_hc, n_mc, block_j)  # keep HCs whole in a tile
+    xp = pad_axis(pad_axis(x, 1, ks.pad), 0, bs.pad)
+    wp = pad_hc_axis(pad_axis(w, 0, ks.pad), 1, js)
+    bp = pad_hc_axis(bias.reshape(1, nj), 1, js, value=NEG)
+    grid = (bs.grid, js.grid, ks.grid)
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=ks.grid, n_mc=js.mc_padded,
+                          gain=gain),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_j), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, block_j), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bs.block, ks.block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((ks.block, js.block_units), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, js.block_units), lambda i, j, k: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_b, block_j), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, nj), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_b, block_j), jnp.float32)],
+        out_specs=pl.BlockSpec((bs.block, js.block_units),
+                               lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bs.padded, js.padded_units), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bs.block, js.block_units), jnp.float32)],
         interpret=interpret,
-    )(x, w, bias.reshape(1, nj))
+    )(xp, wp, bp)
+    return unpad_hc_axis(out[:b], 1, js)

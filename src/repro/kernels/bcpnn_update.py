@@ -11,7 +11,11 @@ four partitioned HBM channels (paper Opt #3); here each (ti, tj) tile of
 p_ij streams HBM→VMEM once and both outputs stream back once — the joint
 trace and the weight matrix never make an extra HBM round-trip.
 
-Grid = (Ni/ti, Nj/tj, B/tk), contraction innermost.
+Grid = (Ni/ti, Nj/tj, B/tk) over the PADDED shapes, contraction
+innermost.  Pad semantics (DESIGN.md §7): pad batch rows of x/y are zero,
+so they add nothing to XᵀY, and the kernel divides by the REAL batch
+size — the co-activation EMA is exact.  Pad rows/columns of pij and mask
+are zero, producing inert outputs that are sliced off.
 """
 from __future__ import annotations
 
@@ -22,7 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .tiling import fit_block
+from .padding import pad_axis
+from .tiling import SUBLANE, lane_multiple, pad_spec
 
 
 def _kernel(x_ref, y_ref, pij_ref, lpi_ref, lpj_ref, mask_ref, alpha_ref,
@@ -72,33 +77,41 @@ def bcpnn_update_pallas(
     """Returns (new_pij, new_w) — see module docstring."""
     b, ni = x.shape
     nj = y.shape[1]
-    block_i = fit_block(ni, block_i)
-    block_j = fit_block(nj, block_j)
-    block_k = fit_block(b, block_k)
-    k_steps = b // block_k
-    grid = (ni // block_i, nj // block_j, k_steps)
-    kern = functools.partial(_kernel, k_steps=k_steps, batch=b, eps=eps)
-    return pl.pallas_call(
+    # Ni is the lane dim of x blocks AND the sublane dim of pij/w blocks;
+    # Nj is a lane dim throughout; the batch is sublane-only.
+    is_ = pad_spec(ni, block_i, lane_multiple(ni))
+    js = pad_spec(nj, block_j, lane_multiple(nj))
+    ks = pad_spec(b, block_k, SUBLANE)
+    xp = pad_axis(pad_axis(x, 1, is_.pad), 0, ks.pad)
+    yp = pad_axis(pad_axis(y, 1, js.pad), 0, ks.pad)
+    pijp = pad_axis(pad_axis(pij, 0, is_.pad), 1, js.pad)
+    maskp = pad_axis(pad_axis(mask, 0, is_.pad), 1, js.pad)
+    lpip = pad_axis(log_pi.reshape(1, ni), 1, is_.pad)
+    lpjp = pad_axis(log_pj.reshape(1, nj), 1, js.pad)
+    grid = (is_.grid, js.grid, ks.grid)
+    kern = functools.partial(_kernel, k_steps=ks.grid, batch=b, eps=eps)
+    new_pij, w = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_k, block_i), lambda i, j, k: (k, i)),   # x
-            pl.BlockSpec((block_k, block_j), lambda i, j, k: (k, j)),   # y
-            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),   # pij
-            pl.BlockSpec((1, block_i), lambda i, j, k: (0, i)),         # log_pi
-            pl.BlockSpec((1, block_j), lambda i, j, k: (0, j)),         # log_pj
-            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),   # mask
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),               # alpha
+            pl.BlockSpec((ks.block, is_.block), lambda i, j, k: (k, i)),   # x
+            pl.BlockSpec((ks.block, js.block), lambda i, j, k: (k, j)),    # y
+            pl.BlockSpec((is_.block, js.block), lambda i, j, k: (i, j)),   # pij
+            pl.BlockSpec((1, is_.block), lambda i, j, k: (0, i)),          # log_pi
+            pl.BlockSpec((1, js.block), lambda i, j, k: (0, j)),           # log_pj
+            pl.BlockSpec((is_.block, js.block), lambda i, j, k: (i, j)),   # mask
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),                  # alpha
         ],
         out_specs=[
-            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
-            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
+            pl.BlockSpec((is_.block, js.block), lambda i, j, k: (i, j)),
+            pl.BlockSpec((is_.block, js.block), lambda i, j, k: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((ni, nj), jnp.float32),
-            jax.ShapeDtypeStruct((ni, nj), jnp.float32),
+            jax.ShapeDtypeStruct((is_.padded, js.padded), jnp.float32),
+            jax.ShapeDtypeStruct((is_.padded, js.padded), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((block_i, block_j), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((is_.block, js.block), jnp.float32)],
         interpret=interpret,
-    )(x, y, pij, log_pi.reshape(1, ni), log_pj.reshape(1, nj), mask,
+    )(xp, yp, pijp, lpip, lpjp, maskp,
       alpha.reshape(1, 1).astype(jnp.float32))
+    return new_pij[:ni, :nj], w[:ni, :nj]

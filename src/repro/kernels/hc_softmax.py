@@ -1,9 +1,11 @@
 """Pallas TPU kernel: per-hypercolumn softmax (divisive normalization).
 
-The minicolumn dimension M is kept whole inside each block so the
+The (padded) minicolumn dimension is kept whole inside each block so the
 normalization is block-local; the batch and hypercolumn dimensions tile
-the grid.  VMEM per block: tb * th * M * 4 bytes (default 128*8*128*4 =
-512 KiB, comfortably double-bufferable in ~16 MiB VMEM).
+the grid.  Operands are padded to aligned blocks (tiling.pad_hc_spec):
+pad minicolumn lanes carry ``NEG`` support, so they underflow to zero
+probability and leave real softmax sums untouched; pad batch rows and
+pad-HCs produce inert values that are sliced off before returning.
 """
 from __future__ import annotations
 
@@ -13,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tiling import fit_block
+from .padding import pad_axis, pad_hc_axis, unpad_hc_axis
+from .tiling import NEG, SUBLANE, pad_hc_spec, pad_spec
 
 
 def _kernel(s_ref, o_ref, *, n_mc: int, gain: float):
@@ -41,15 +44,18 @@ def hc_softmax_pallas(
     """support: (B, n_hc*n_mc) -> rates, softmax within each HC."""
     b, n = support.shape
     assert n == n_hc * n_mc, (n, n_hc, n_mc)
-    block_b = fit_block(b, block_b)
-    block_h = fit_block(n_hc, block_h)
-    bn = block_h * n_mc
-    grid = (b // block_b, n_hc // block_h)
-    return pl.pallas_call(
-        functools.partial(_kernel, n_mc=n_mc, gain=gain),
+    bs = pad_spec(b, block_b, SUBLANE)
+    hs = pad_hc_spec(n_hc, n_mc, block_h * n_mc)
+    s = pad_hc_axis(support, 1, hs, value=NEG)
+    s = pad_axis(s, 0, bs.pad)
+    grid = (bs.grid, hs.grid)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_mc=hs.mc_padded, gain=gain),
         grid=grid,
-        in_specs=[pl.BlockSpec((block_b, bn), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((block_b, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, n), support.dtype),
+        in_specs=[pl.BlockSpec((bs.block, hs.block_units), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bs.block, hs.block_units), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bs.padded, hs.padded_units),
+                                       support.dtype),
         interpret=interpret,
-    )(support)
+    )(s)
+    return unpad_hc_axis(out[:b], 1, hs)

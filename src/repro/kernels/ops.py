@@ -8,38 +8,93 @@ point (core/bcpnn_layer.py, DESIGN.md §3) routes every activation /
 plasticity call of a pallas-tagged projection here, mirroring the paper's
 stream-dataflow configuration, while the pure-jnp reference path plays
 the sequential baseline (benchmarks/bench_stream_vs_seq.py).
+
+Two per-projection execution choices happen here (DESIGN.md §7):
+
+* **dense vs patchy** — projections with an ``nact`` connectivity budget
+  route ``fused_forward`` through the compact patchy kernels
+  (kernels/patchy.py), streaming only live pre-blocks; ``fused_learn``
+  additionally requires ``spec.patchy_traces`` (patchy plasticity is a
+  semantic choice — silent synapses hold their traces — not just a
+  schedule).
+* **block sizes** — unless the caller passes explicit ``block_*`` kwargs,
+  each wrapper consults the autotune cache (kernels/tuning.py) keyed by
+  the call's geometry and the active jax backend.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from ..core.bcpnn_layer import Projection, ProjSpec, _expand_mask
+from ..core.bcpnn_layer import Projection, ProjSpec, expand_hc_mask, is_patchy
 from ..core.traces import Traces
+from . import tuning
 from .bcpnn_fwd import bcpnn_fwd_pallas
 from .bcpnn_update import bcpnn_update_pallas
 from .hc_softmax import hc_softmax_pallas
+from .patchy import patchy_forward, patchy_update
+
+# Force interpret mode on ("1") or off ("0") regardless of the detected
+# backend — tests and CI pin the interpreter explicitly with this.
+ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+
+
+@functools.lru_cache(maxsize=1)
+def _default_backend() -> str:
+    # jax.default_backend() initializes the platform on every call; the
+    # answer cannot change within a process, so resolve it once.
+    return jax.default_backend()
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    env = os.environ.get(ENV_INTERPRET)
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "")
+    return _default_backend() != "tpu"
+
+
+# block kwargs each wrapper accepts — guards against stale cache entries
+_KERNEL_BLOCKS = {
+    "hc_softmax": ("block_b", "block_h"),
+    "bcpnn_fwd": ("block_b", "block_j", "block_k"),
+    "bcpnn_update": ("block_i", "block_j", "block_k"),
+    "patchy_forward": ("block_b", "block_k"),
+    "patchy_update": ("block_i", "block_k"),
+}
+
+
+def _blocks(kernel: str, kw: dict, **dims: int) -> dict:
+    """Merge autotuned block sizes under explicit caller kwargs."""
+    if any(k.startswith("block_") for k in kw):
+        return kw
+    tuned = tuning.lookup(kernel, **dims)
+    if not tuned:
+        return kw
+    allowed = _KERNEL_BLOCKS[kernel]
+    return {**{k: v for k, v in tuned.items() if k in allowed}, **kw}
 
 
 def hc_softmax(support: jax.Array, n_hc: int, n_mc: int, gain: float = 1.0,
                **kw) -> jax.Array:
+    kw = _blocks("hc_softmax", kw, b=support.shape[0], n_hc=n_hc, n_mc=n_mc)
     return hc_softmax_pallas(support, n_hc, n_mc, gain,
                              interpret=_interpret(), **kw)
 
 
 def bcpnn_fwd(x: jax.Array, w: jax.Array, bias: jax.Array, n_hc: int,
               n_mc: int, gain: float = 1.0, **kw) -> jax.Array:
+    kw = _blocks("bcpnn_fwd", kw, b=x.shape[0], ni=x.shape[1],
+                 n_hc=n_hc, n_mc=n_mc)
     return bcpnn_fwd_pallas(x, w, bias, n_hc, n_mc, gain,
                             interpret=_interpret(), **kw)
 
 
 def bcpnn_update(pij, log_pi, log_pj, x, y, mask, alpha, eps=1e-4, **kw):
+    kw = _blocks("bcpnn_update", kw, b=x.shape[0], ni=x.shape[1],
+                 nj=y.shape[1])
     return bcpnn_update_pallas(pij, log_pi, log_pj, x, y, mask, alpha,
                                eps=eps, interpret=_interpret(), **kw)
 
@@ -47,7 +102,18 @@ def bcpnn_update(pij, log_pi, log_pj, x, y, mask, alpha, eps=1e-4, **kw):
 # ------------------------------------------------- fused core stages ----
 
 def fused_forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
-    """Kernel-fused equivalent of core.bcpnn_layer.forward."""
+    """Kernel-fused equivalent of core.bcpnn_layer.forward.
+
+    Patchy projections stream only the live pre-blocks (exact: masked-out
+    weights are zero, so the skipped work contributes nothing)."""
+    if is_patchy(spec):
+        kw = _blocks("patchy_forward", {}, b=x.shape[0],
+                     k=spec.nact * spec.pre.M, hj=spec.post.H,
+                     mj=spec.post.M)
+        return patchy_forward(
+            x, proj.w, proj.b, proj.mask, spec.nact, spec.pre.M,
+            spec.post.H, spec.post.M, spec.gain,
+            interpret=_interpret(), **kw)
     return bcpnn_fwd(x, proj.w, proj.b, spec.post.H, spec.post.M, spec.gain)
 
 
@@ -56,7 +122,9 @@ def fused_learn(proj: Projection, spec: ProjSpec, x: jax.Array,
     """Kernel-fused equivalent of core.bcpnn_layer.learn.
 
     The cheap vector traces (p_i, p_j) update in plain jnp; the O(Ni·Nj)
-    joint-trace EMA + weight recompute run in the fused Pallas kernel.
+    joint-trace EMA + weight recompute run in the fused Pallas kernel —
+    the compact patchy kernel when the projection opted into patchy-trace
+    plasticity (DESIGN.md §7), the dense masked kernel otherwise.
     """
     tr = proj.traces
     a = jnp.maximum(1.0 / (tr.t.astype(jnp.float32) + 1.0), spec.alpha)
@@ -64,9 +132,18 @@ def fused_learn(proj: Projection, spec: ProjSpec, x: jax.Array,
     pj = (1.0 - a) * tr.pj + a * jnp.mean(y, axis=0)
     log_pi = jnp.log(jnp.clip(pi, spec.eps, 1.0))
     log_pj = jnp.log(jnp.clip(pj, spec.eps, 1.0))
-    mask_units = _expand_mask(proj.mask, spec)
-    new_pij, w = bcpnn_update(tr.pij, log_pi, log_pj, x, y, mask_units,
-                              a, eps=spec.eps)
+    if is_patchy(spec) and spec.patchy_traces:
+        kw = _blocks("patchy_update", {}, b=x.shape[0],
+                     k=spec.nact * spec.pre.M, hj=spec.post.H,
+                     mj=spec.post.M)
+        new_pij, w = patchy_update(
+            tr.pij, log_pi, log_pj, x, y, proj.mask, a, spec.nact,
+            spec.pre.M, spec.post.H, spec.post.M, eps=spec.eps,
+            interpret=_interpret(), **kw)
+    else:
+        mask_units = expand_hc_mask(proj.mask, spec)
+        new_pij, w = bcpnn_update(tr.pij, log_pi, log_pj, x, y, mask_units,
+                                  a, eps=spec.eps)
     b = log_pj
     return Projection(
         traces=Traces(pi=pi, pj=pj, pij=new_pij, t=tr.t + 1),

@@ -1,0 +1,56 @@
+"""Operand padding/unpadding for the pad-to-aligned kernel wrappers.
+
+Implements the inert-pad semantics of DESIGN.md §7 on jnp arrays: plain
+axes pad with zeros (inert in matmul contractions and trace EMAs),
+hypercolumnar unit axes pad *within* each HC (``mc_padded`` lanes) and
+then with whole pad-HCs, using ``tiling.NEG`` where the axis feeds a
+softmax so pad lanes underflow to zero probability.  All helpers are
+no-ops when the plan requires no padding, so aligned geometries trace to
+the exact same graphs as before.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .tiling import HCPadSpec
+
+
+def pad_axis(x: jax.Array, axis: int, pad: int, value: float = 0.0) -> jax.Array:
+    """Pad one axis of ``x`` at the end with ``pad`` entries of ``value``."""
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis % x.ndim] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pad_hc_axis(x: jax.Array, axis: int, hs: HCPadSpec,
+                value: float = 0.0) -> jax.Array:
+    """Pad a hypercolumnar unit axis (``n_hc * n_mc`` entries) to the
+    planned ``hc.padded * mc_padded`` layout: ``value`` fills both the
+    extra minicolumn lanes inside each real HC and the whole pad-HCs."""
+    if hs.mc_padded == hs.n_mc and hs.hc.pad == 0:
+        return x
+    axis = axis % x.ndim
+    pre, post = x.shape[:axis], x.shape[axis + 1:]
+    x = x.reshape(pre + (hs.n_hc, hs.n_mc) + post)
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, hs.hc.pad)
+    widths[axis + 1] = (0, hs.mc_padded - hs.n_mc)
+    x = jnp.pad(x, widths, constant_values=value)
+    return x.reshape(pre + (hs.padded_units,) + post)
+
+
+def unpad_hc_axis(x: jax.Array, axis: int, hs: HCPadSpec) -> jax.Array:
+    """Slice a padded hypercolumnar unit axis back to its logical size."""
+    if hs.mc_padded == hs.n_mc and hs.hc.pad == 0:
+        return x
+    axis = axis % x.ndim
+    pre, post = x.shape[:axis], x.shape[axis + 1:]
+    x = x.reshape(pre + (hs.hc.padded, hs.mc_padded) + post)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, hs.n_hc)
+    idx[axis + 1] = slice(0, hs.n_mc)
+    x = x[tuple(idx)]
+    return x.reshape(pre + (hs.units,) + post)

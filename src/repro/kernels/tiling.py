@@ -1,45 +1,127 @@
-"""Block-size fitting for the Pallas kernels.
+"""Pad-to-aligned tiling plans for the Pallas kernels.
 
-The kernels tile (batch, pre, post) with default MXU-friendly blocks, but
-real BCPNN geometries are rarely powers of two (e.g. Model 1's pre side is
-28*28*2 = 1568 units).  Rather than asserting divisibility, each wrapper
-fits its requested block down to the largest divisor of the dimension —
-degrading tile efficiency, never correctness.  A badly-aligned fit (not a
-multiple of the 8-sublane f32 tile) is warned about once per site: it
-works under the CPU interpreter but may not compile, or will run
-pathologically, on the Mosaic TPU target — pad the dimension instead.
+Real BCPNN geometries are rarely powers of two (Model 1's pre side is
+28*28*2 = 1568 units; readouts have 2 or 10 classes), and the f32 Mosaic
+tile is (8 sublanes x 128 lanes).  Instead of fitting blocks down to
+divisors of the raw dimension — which degrades misaligned geometries to
+size-1 tiles — every grid axis is planned here as *pad up to an aligned
+block*: ``pad_spec`` picks a block that is a multiple of the hardware
+tile and rounds the dimension up to a multiple of that block, minimizing
+the padding.  The kernel wrappers pad their operands with inert values
+(zeros into matmul contractions and trace EMAs, ``NEG`` into softmax
+lanes) and slice the outputs back, so padding never changes results —
+see DESIGN.md §7 for the pad-semantics table.
+
+Hypercolumnar axes get ``pad_hc_spec``: minicolumn counts are padded to
+lane-friendly sizes (``pad_mc``) and hypercolumns stay whole within a
+block, so per-HC softmax remains block-local.
 """
 from __future__ import annotations
 
-import warnings
+import dataclasses
+import math
 
-# Misalignment warnings already issued, keyed on (dim, fitted block).
-# ``warnings.warn`` alone fires on every trace — an epoch sweep re-traces
-# per shape and would spam one warning per jit — so dedupe here and warn
-# truly once per site.
-_warned_fits: set = set()
+SUBLANE = 8    # f32 sublane tile (second-to-last block dim)
+LANE = 128     # lane tile (last block dim)
 
-
-def fit_block(dim: int, block: int) -> int:
-    """Largest divisor of ``dim`` that is <= ``block`` (>= 1)."""
-    requested = block
-    block = max(1, min(block, dim))
-    while dim % block:
-        block -= 1
-    # Tiny toy geometries (tests, examples) are inherently unaligned and
-    # only ever run interpreted; warn at sizes someone would put on a TPU.
-    if dim >= 64 and block % 8 != 0 and (dim, block) not in _warned_fits:
-        _warned_fits.add((dim, block))
-        warnings.warn(
-            f"Pallas block for dimension {dim} fitted to {block} "
-            f"(requested {requested}), which is not 8-sublane aligned; "
-            f"fine in interpret mode, but pad the dimension for TPU",
-            stacklevel=2)
-    return block
+# Inert softmax pad: finite (no inf-inf NaNs even in all-pad lanes) but
+# exp(NEG - max) underflows to exactly 0.0 in both f32 and bf16, so pad
+# lanes contribute nothing to real softmax sums.
+NEG = -1e30
 
 
-def fit_hc_block(n_hc: int, n_mc: int, block_units: int) -> int:
-    """Fit a unit-count block for a hypercolumnar axis of n_hc * n_mc
-    units: a multiple of n_mc (HCs stay whole, so softmax is block-local)
-    that divides the total unit count."""
-    return n_mc * fit_block(n_hc, max(1, block_units // n_mc))
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pow2_ge(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def lane_multiple(dim: int) -> int:
+    """Alignment target for a lane (last) block dim: full 128-lane tiles
+    when the dimension supports them, 8 otherwise (small arrays are padded
+    internally by Mosaic; sublane alignment still matters)."""
+    return LANE if dim >= LANE else SUBLANE
+
+
+@dataclasses.dataclass(frozen=True)
+class PadSpec:
+    """Padding plan for one grid axis: ``block`` is a multiple of the
+    requested alignment and divides ``padded`` exactly."""
+
+    dim: int      # logical size
+    padded: int   # padded size the kernel runs on
+    block: int    # fitted, aligned block
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.dim
+
+    @property
+    def grid(self) -> int:
+        return self.padded // self.block
+
+
+def pad_spec(dim: int, block: int, multiple: int = SUBLANE) -> PadSpec:
+    """Plan an axis: among blocks that are multiples of ``multiple`` and at
+    most the requested ``block``, pick the one minimizing the padded size
+    (tie broken toward the larger block, i.e. the shorter grid)."""
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    cap = max(multiple, min(round_up(block, multiple), round_up(dim, multiple)))
+    best = None
+    for cand in range(cap, 0, -multiple):
+        padded = round_up(dim, cand)
+        if best is None or padded < best.padded:
+            best = PadSpec(dim, padded, cand)
+    return best
+
+
+def pad_mc(n_mc: int) -> int:
+    """Lane-friendly padded minicolumn count: the next power of two below
+    128 (so whole lane tiles hold 128/m_p HCs exactly), whole lane
+    multiples above."""
+    if n_mc >= LANE:
+        return round_up(n_mc, LANE)
+    return pow2_ge(n_mc)
+
+
+@dataclasses.dataclass(frozen=True)
+class HCPadSpec:
+    """Padding plan for a hypercolumnar unit axis of ``n_hc * n_mc`` units:
+    minicolumns pad to ``mc_padded`` per HC, hypercolumns pad per ``hc``,
+    and every block holds ``hc.block`` whole HCs (softmax stays
+    block-local)."""
+
+    n_hc: int
+    n_mc: int
+    hc: PadSpec      # plan for the hypercolumn axis
+    mc_padded: int   # padded minicolumns per hypercolumn
+
+    @property
+    def units(self) -> int:
+        return self.n_hc * self.n_mc
+
+    @property
+    def padded_units(self) -> int:
+        return self.hc.padded * self.mc_padded
+
+    @property
+    def block_units(self) -> int:
+        return self.hc.block * self.mc_padded
+
+    @property
+    def grid(self) -> int:
+        return self.hc.grid
+
+
+def pad_hc_spec(n_hc: int, n_mc: int, block_units: int) -> HCPadSpec:
+    """Plan a hypercolumnar axis targeting roughly ``block_units`` units
+    per block.  The HC-count block is a multiple of ``128 / gcd(m_p, 128)``
+    so each block's lane extent is a whole number of 128-lane tiles."""
+    m_p = pad_mc(n_mc)
+    hq = LANE // math.gcd(m_p, LANE)
+    hc = pad_spec(n_hc, max(1, block_units // m_p), multiple=hq)
+    return HCPadSpec(n_hc, n_mc, hc, m_p)
+

@@ -51,6 +51,11 @@ def main():
                          "train and save here (default: temp dir)")
     ap.add_argument("--depth", type=int, default=2)
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="pallas")
+    ap.add_argument("--nact", type=int, default=None,
+                    help="patchy connectivity budget for the input "
+                         "projection: with backend=pallas the serving "
+                         "infer path streams only the live pre-blocks "
+                         "(kernels/patchy.py)")
     ap.add_argument("--side", type=int, default=8)
     ap.add_argument("--classes", type=int, default=4)
     ap.add_argument("--hidden-hc", type=int, default=8)
@@ -81,10 +86,13 @@ def main():
     mgr = CheckpointManager(ckpt_dir)
     step = mgr.latest_step()
     if step is None:
+        nact = ([args.nact] + [None] * (args.depth - 1)
+                if args.nact else None)
         spec = deep_synth_spec(side=args.side, depth=args.depth,
                                n_classes=args.classes,
                                hidden_hc=args.hidden_hc,
                                hidden_mc=args.hidden_mc,
+                               nact=nact,
                                backend=args.backend)
         print(f"[serve-bcpnn] no checkpoint under {ckpt_dir}; training "
               f"depth-{spec.depth} {args.backend} network "

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.bcpnn_layer import validate_patchy_mask
 from ..core.network import as_spec, infer, supervised_readout_step
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .metrics import ServeMetrics
@@ -58,6 +59,14 @@ class BCPNNService:
                  poll_ms: float = 20.0, result_retention: int = 4096):
         self.spec = as_spec(spec_or_cfg)
         self.state = state
+        # Deployment boundary for arbitrary (possibly pre-exactly-nact-fix)
+        # checkpoints: the compact patchy infer path assumes the
+        # exactly-nact mask invariant, so verify it on the concrete state
+        # before any request is served.
+        for l, (proj, pspec) in enumerate(zip(state.projs, self.spec.projs)):
+            validate_patchy_mask(proj.mask, pspec, where=f"stack proj {l}")
+        validate_patchy_mask(state.readout.mask, self.spec.readout,
+                             where="readout")
         self.online_learning = online_learning
         self.feedback_batch = feedback_batch
         self._poll_s = poll_ms * 1e-3

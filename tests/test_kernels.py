@@ -14,7 +14,10 @@ from repro.core.hypercolumns import LayerGeom
 
 
 @pytest.mark.parametrize("b,h,m", [(8, 4, 8), (128, 16, 128), (64, 32, 64),
-                                   (256, 8, 256)])
+                                   (256, 8, 256),
+                                   # hostile: prime batch, odd minicolumn
+                                   # counts, single-HC readout shapes
+                                   (97, 7, 10), (13, 1, 10), (64, 784, 2)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_hc_softmax_sweep(b, h, m, dtype):
     s = (jax.random.normal(jax.random.PRNGKey(0), (b, h * m)) * 4).astype(dtype)
@@ -27,6 +30,9 @@ def test_hc_softmax_sweep(b, h, m, dtype):
 
 @pytest.mark.parametrize("b,ni,hj,mj", [
     (8, 32, 4, 16), (64, 256, 8, 64), (128, 1024, 16, 128), (32, 512, 4, 128),
+    # hostile: Model-1's 1568-unit pre side, prime batch, n_mc not a
+    # multiple of 8 — the geometries the divisor-fitting layer degraded on
+    (97, 1568, 4, 10), (64, 251, 3, 12),
 ])
 def test_bcpnn_fwd_sweep(b, ni, hj, mj):
     k = jax.random.split(jax.random.PRNGKey(1), 3)
@@ -39,7 +45,9 @@ def test_bcpnn_fwd_sweep(b, ni, hj, mj):
 
 
 @pytest.mark.parametrize("b,ni,nj", [(8, 32, 64), (64, 256, 512),
-                                     (128, 1024, 512), (256, 512, 2048)])
+                                     (128, 1024, 512), (256, 512, 2048),
+                                     # hostile: prime batch/pre, odd post
+                                     (97, 251, 40), (31, 1568, 96)])
 def test_bcpnn_update_sweep(b, ni, nj):
     k = jax.random.split(jax.random.PRNGKey(2), 6)
     pij = jax.random.uniform(k[0], (ni, nj)) * 0.01 + 1e-5
@@ -118,3 +126,101 @@ def test_learn_parity_across_bias_correction_crossover(nact):
     if nact is not None:  # patchy invariant holds through both regimes
         for p in (proj_j, proj_f):
             assert np.all(np.asarray(p.mask).sum(0) == nact)
+
+
+# ------------------------------------------------ pad-to-aligned tiling --
+
+@pytest.mark.parametrize("dim", [1, 5, 10, 97, 100, 251, 784, 1568, 4096])
+@pytest.mark.parametrize("block", [8, 100, 128, 512])
+def test_pad_spec_invariants(dim, block):
+    """Every planned axis: aligned block, block divides padded size, and
+    padding never exceeds one block."""
+    from repro.kernels.tiling import SUBLANE, pad_spec
+
+    ps = pad_spec(dim, block, SUBLANE)
+    assert ps.block % SUBLANE == 0
+    assert ps.padded % ps.block == 0
+    assert ps.padded >= dim and ps.padded - dim < ps.block
+    assert ps.grid == ps.padded // ps.block
+
+
+@pytest.mark.parametrize("n_hc,n_mc", [(1, 10), (7, 10), (32, 128), (784, 2),
+                                       (32, 100), (5, 200)])
+def test_pad_hc_spec_lane_aligned(n_hc, n_mc):
+    """Hypercolumnar blocks span whole HCs and a whole number of 128-lane
+    tiles (or the whole padded axis for sub-lane-sized toys)."""
+    from repro.kernels.tiling import LANE, pad_hc_spec
+
+    hs = pad_hc_spec(n_hc, n_mc, 512)
+    assert hs.mc_padded >= n_mc
+    assert hs.block_units % hs.mc_padded == 0          # whole HCs per block
+    assert hs.padded_units % hs.block_units == 0
+    if hs.padded_units >= LANE:
+        assert hs.block_units % LANE == 0
+
+
+def test_no_misalignment_warnings_at_model1_scale():
+    """Model 1's geometry (Ni=1568, Nj=4096, b=256) must plan aligned
+    blocks end-to-end: no warnings from any kernel wrapper."""
+    import warnings
+
+    b, ni, hj, mj = 256, 1568, 32, 128
+    k = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.uniform(k[0], (b, ni))
+    w = jax.random.normal(k[1], (ni, hj * mj)) * 0.1
+    bias = jax.random.normal(k[2], (hj * mj,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        out = bcpnn_fwd(x, w, bias, hj, mj)
+        jax.block_until_ready(out)
+    assert out.shape == (b, hj * mj)
+
+
+# ------------------------------------------------------- autotune cache --
+
+def test_tuned_blocks_consulted(tmp_path, monkeypatch):
+    """kernels/ops.py must pass cached winners through to the kernel (and
+    explicit caller kwargs must still win over the cache)."""
+    import json
+
+    from repro.kernels import ops, tuning
+
+    dims = dict(b=16, ni=48, n_hc=4, n_mc=8)
+    cache = {"version": 1, "entries": {
+        tuning.entry_key("bcpnn_fwd", **dims): {"block_b": 16, "block_j": 16}}}
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps(cache))
+    monkeypatch.setenv(tuning.ENV_CACHE, str(path))
+
+    seen = {}
+    real = ops.bcpnn_fwd_pallas
+
+    def spy(*a, **kw):
+        seen.update(kw)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "bcpnn_fwd_pallas", spy)
+    k = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.uniform(k[0], (16, 48))
+    w = jax.random.normal(k[1], (48, 32)) * 0.1
+    bias = jax.random.normal(k[2], (32,))
+    got = ops.bcpnn_fwd(x, w, bias, 4, 8)
+    assert seen["block_b"] == 16 and seen["block_j"] == 16
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref_bcpnn_fwd(x, w, bias, 4, 8)),
+                               atol=1e-5)
+    seen.clear()
+    ops.bcpnn_fwd(x, w, bias, 4, 8, block_b=8)  # explicit kwarg wins
+    assert seen["block_b"] == 8 and "block_j" not in seen
+
+
+def test_interpret_env_override(monkeypatch):
+    from repro.kernels import ops
+
+    monkeypatch.setenv(ops.ENV_INTERPRET, "1")
+    assert ops._interpret() is True
+    monkeypatch.setenv(ops.ENV_INTERPRET, "0")
+    assert ops._interpret() is False
+    monkeypatch.delenv(ops.ENV_INTERPRET)
+    # memoized backend probe: same answer, no re-detection
+    assert ops._interpret() == (ops._default_backend() != "tpu")

@@ -1,0 +1,185 @@
+"""Patchy-sparse execution path: the compact gathered kernels must match
+the masked-dense schedules exactly — through chained learning, across a
+rewire (the index table is rebuilt from the new mask), and under the
+serving engine — on hostile (non-power-of-two) geometries."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bcpnn_layer import (
+    ProjSpec, _learn_jnp, forward, init_projection, learn, rewire,
+)
+from repro.core.hypercolumns import LayerGeom
+from repro.kernels import active_pre_hcs, fused_forward, fused_learn
+from repro.kernels.patchy import unit_gather_indices
+
+HOSTILE = ProjSpec(LayerGeom(13, 2), LayerGeom(5, 10), alpha=0.2, nact=4,
+                   backend="pallas")
+
+
+def _steps(proj, spec, n, seed=1, b=19):
+    for k in jax.random.split(jax.random.PRNGKey(seed), n):
+        kx, ky = jax.random.split(k)
+        x = jax.random.uniform(kx, (b, spec.pre.N))
+        y = jax.random.uniform(ky, (b, spec.post.N))
+        yield x, y
+
+
+# -------------------------------------------------------- index table ----
+
+def test_active_table_matches_mask():
+    spec = HOSTILE
+    proj = init_projection(spec, jax.random.PRNGKey(0))
+    table = np.asarray(active_pre_hcs(proj.mask, spec.nact))
+    mask = np.asarray(proj.mask)
+    for j in range(spec.post.H):
+        np.testing.assert_array_equal(np.sort(table[j]),
+                                      np.flatnonzero(mask[:, j]))
+
+
+def test_unit_gather_indices_pad_sentinel():
+    table = jnp.asarray([[0, 2]], jnp.int32)
+    ui = np.asarray(unit_gather_indices(table, mi=2, k_pad=3, sentinel=99))
+    np.testing.assert_array_equal(ui[0], [0, 1, 4, 5, 99, 99, 99])
+
+
+# -------------------------------------------- forward: exact vs dense ----
+
+@pytest.mark.parametrize("b,hi,mi,hj,mj,nact", [
+    (33, 13, 2, 5, 10, 4),     # hostile everything
+    (97, 784, 2, 4, 16, 128),  # Model-1-shaped pre side, prime batch
+    (16, 9, 3, 3, 12, 2),      # mi > 2, tiny nact
+])
+def test_patchy_forward_matches_masked_dense(b, hi, mi, hj, mj, nact):
+    spec = ProjSpec(LayerGeom(hi, mi), LayerGeom(hj, mj), alpha=1e-2,
+                    nact=nact, backend="pallas")
+    proj = init_projection(spec, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (b, spec.pre.N))
+    got = fused_forward(proj, spec, x)   # dispatches to the patchy kernel
+    want = forward(proj, spec.with_backend("jnp"), x)  # masked dense
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ------------------------------------- learn: patchy-trace semantics ----
+
+def test_patchy_learn_matches_jnp_reference_including_rewire():
+    """Compact patchy plasticity vs its jnp reference (dense compute,
+    where-masked trace) — exact through 8 chained steps with a rewire in
+    the middle.  Same traces on both sides -> the rewire picks the same
+    mask -> the rebuilt index table keeps parity after it."""
+    spec = dataclasses.replace(HOSTILE, patchy_traces=True)
+    proj_j = init_projection(spec, jax.random.PRNGKey(0))
+    proj_f = jax.tree.map(jnp.array, proj_j)
+    for i, (x, y) in enumerate(_steps(proj_j, spec, 8)):
+        proj_j = _learn_jnp(proj_j, spec, x, y)
+        proj_f = fused_learn(proj_f, spec, x, y)
+        np.testing.assert_allclose(np.asarray(proj_f.traces.pij),
+                                   np.asarray(proj_j.traces.pij), atol=1e-6,
+                                   err_msg=f"pij diverged at step {i}")
+        np.testing.assert_allclose(np.asarray(proj_f.w),
+                                   np.asarray(proj_j.w), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(proj_f.b),
+                                   np.asarray(proj_j.b), atol=1e-6)
+        if i == 3:
+            proj_j = rewire(proj_j, spec)
+            proj_f = rewire(proj_f, spec)
+            np.testing.assert_array_equal(np.asarray(proj_j.mask),
+                                          np.asarray(proj_f.mask))
+            assert np.all(np.asarray(proj_f.mask).sum(0) == spec.nact)
+
+
+def test_patchy_learn_matches_masked_dense_while_mask_static():
+    """With a static mask the active joint-trace entries follow the same
+    EMA recursion under both semantics, so weights, biases and forward
+    outputs of the patchy path equal the masked-DENSE path exactly; only
+    the silent (inactive) pij entries differ — held vs tracked."""
+    spec_dense = HOSTILE
+    spec_patchy = dataclasses.replace(HOSTILE, patchy_traces=True)
+    proj_d = init_projection(spec_dense, jax.random.PRNGKey(0))
+    proj_p = jax.tree.map(jnp.array, proj_d)
+    for x, y in _steps(proj_d, spec_dense, 5):
+        proj_d = fused_learn(proj_d, spec_dense, x, y)
+        proj_p = fused_learn(proj_p, spec_patchy, x, y)
+    np.testing.assert_allclose(np.asarray(proj_p.w), np.asarray(proj_d.w),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(proj_p.b), np.asarray(proj_d.b),
+                               atol=1e-6)
+    x = jax.random.uniform(jax.random.PRNGKey(7), (23, spec_dense.pre.N))
+    np.testing.assert_allclose(
+        np.asarray(fused_forward(proj_p, spec_patchy, x)),
+        np.asarray(fused_forward(proj_d, spec_dense, x)), atol=1e-5)
+    # active entries agree; silent ones hold their init value in patchy
+    keep = np.repeat(np.repeat(np.asarray(proj_d.mask) > 0,
+                               spec_dense.pre.M, 0), spec_dense.post.M, 1)
+    np.testing.assert_allclose(np.asarray(proj_p.traces.pij)[keep],
+                               np.asarray(proj_d.traces.pij)[keep],
+                               atol=1e-6)
+    assert not np.allclose(np.asarray(proj_p.traces.pij)[~keep],
+                           np.asarray(proj_d.traces.pij)[~keep])
+
+
+def test_patchy_cross_backend_parity():
+    """learn() dispatch: backend=jnp and backend=pallas implement the SAME
+    patchy-trace semantics, so a whole train/rewire/train run stays in
+    lockstep across backends."""
+    spec_j = dataclasses.replace(HOSTILE, backend="jnp", patchy_traces=True,
+                                 struct_every=3)
+    spec_p = dataclasses.replace(spec_j, backend="pallas")
+    proj_j = init_projection(spec_j, jax.random.PRNGKey(0))
+    proj_p = jax.tree.map(jnp.array, proj_j)
+    for x, y in _steps(proj_j, spec_j, 6):
+        proj_j = learn(proj_j, spec_j, x, y)
+        proj_p = learn(proj_p, spec_p, x, y)
+    np.testing.assert_allclose(np.asarray(proj_p.traces.pij),
+                               np.asarray(proj_j.traces.pij), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(proj_p.w), np.asarray(proj_j.w),
+                               atol=1e-4)
+
+
+# ------------------------------------------- over-budget mask guard ----
+
+def test_over_budget_mask_rejected_at_serving_boundary():
+    """Masks that violate the exactly-nact invariant (e.g. checkpoints
+    predating the topk fix) would be silently truncated by the index
+    table — the engine must refuse them loudly instead."""
+    from repro.core.bcpnn_layer import validate_patchy_mask
+    from repro.core.network import init_deep, make_network_spec
+    from repro.serve import BCPNNService
+
+    spec = make_network_spec(LayerGeom(10, 2), [(4, 8)], n_classes=3,
+                             nact=[3], backend="pallas")
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    validate_patchy_mask(state.projs[0].mask, spec.projs[0])  # clean: ok
+    bad_mask = state.projs[0].mask.at[:, 0].set(1.0)  # 10 > nact=3
+    bad = dataclasses.replace(
+        state, projs=(dataclasses.replace(state.projs[0], mask=bad_mask),))
+    with pytest.raises(ValueError, match="exceeding nact"):
+        BCPNNService(bad, spec, max_batch=8)
+
+
+# ----------------------------------------------- serving integration ----
+
+def test_serving_engine_infers_through_patchy_path():
+    """A checkpoint-shaped patchy network serves through BCPNNService: the
+    bucketed infer path dispatches to the compact kernels and returns the
+    same predictions as the jnp reference network."""
+    from repro.core.network import init_deep, make_network_spec
+    from repro.core.network import infer as net_infer
+    from repro.serve import BCPNNService
+
+    spec_p = make_network_spec(LayerGeom(16, 2), [(4, 8)], n_classes=3,
+                               alpha=1e-2, nact=[5], backend="pallas")
+    state = init_deep(spec_p, jax.random.PRNGKey(0))
+    xs = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (12, 32)))
+    want = np.asarray(net_infer(state, spec_p.with_backend("jnp"),
+                                jnp.asarray(xs))[1])
+    svc = BCPNNService(state, spec_p, max_batch=8, max_wait_ms=2.0).start()
+    try:
+        ids = [svc.submit(x) for x in xs]
+        got = np.asarray([svc.result(i).pred for i in ids])
+    finally:
+        svc.stop()
+    np.testing.assert_array_equal(got, want)
