@@ -29,7 +29,8 @@ from repro.kernels.bcpnn_fwd import bcpnn_fwd_pallas
 from repro.kernels.bcpnn_update import bcpnn_update_pallas
 from repro.kernels.hc_softmax import hc_softmax_pallas
 from repro.kernels.ops import _interpret
-from repro.kernels.patchy import patchy_forward, patchy_update
+from repro.kernels.patchy import (compact_forward, compact_update,
+                                  patchy_forward, patchy_update)
 
 # Geometry per model (Table 1 shapes): hi*mi pre units, hj*mj post units,
 # nact the struct-variant connectivity budget.
@@ -48,6 +49,8 @@ FULL_CANDIDATES = {
                      "block_k": (64, 128)},
     "patchy_forward": {"block_b": (128, 256), "block_k": (256, 512)},
     "patchy_update": {"block_i": (256, 512), "block_k": (64, 128)},
+    "compact_forward": {"block_b": (128, 256), "block_k": (256, 512)},
+    "compact_update": {"block_i": (256, 512), "block_k": (64, 128)},
 }
 # The interpreter pays per-tile Python overhead, so a wide sweep is slow
 # and meaningless off-TPU; exercise the machinery with two points each.
@@ -57,6 +60,8 @@ SMOKE_CANDIDATES = {
     "bcpnn_update": {"block_i": (64, 128)},
     "patchy_forward": {"block_b": (16, 32)},
     "patchy_update": {"block_i": (16, 32)},
+    "compact_forward": {"block_b": (16, 32)},
+    "compact_update": {"block_i": (16, 32)},
 }
 
 
@@ -80,14 +85,20 @@ def _make_operands(g: dict):
     bias = jax.random.normal(k[3], (nj,))
     pij = jax.random.uniform(k[4], (ni, nj)) * 0.01 + 1e-5
     from repro.core.bcpnn_layer import topk_mask
-    mask_hc = topk_mask(jax.random.uniform(k[5], (g["hi"], g["hj"])),
-                        min(g["nact"], g["hi"]))
+    from repro.core.compact import build_table, gather_dense, unit_indices
+    nact = min(g["nact"], g["hi"])
+    mask_hc = topk_mask(jax.random.uniform(k[5], (g["hi"], g["hj"])), nact)
     mask = jnp.repeat(jnp.repeat(mask_hc, g["mi"], 0), g["mj"], 1)
+    table = build_table(mask_hc, nact)
+    ui = unit_indices(table, g["mi"], sentinel=ni)
     lpi = jnp.log(jnp.full((ni,), 0.5))
     lpj = jnp.log(jnp.full((nj,), 1.0 / g["mj"]))
     alpha = jnp.asarray(0.01)
     return dict(x=x, y=y, w=w, bias=bias, pij=pij, mask=mask,
-                mask_hc=mask_hc, lpi=lpi, lpj=lpj, alpha=alpha)
+                mask_hc=mask_hc, table=table,
+                w_c=gather_dense(w, ui, g["hj"], g["mj"]),
+                pij_c=gather_dense(pij, ui, g["hj"], g["mj"]),
+                lpi=lpi, lpj=lpj, alpha=alpha)
 
 
 def _calls(g: dict, ops: dict, interpret: bool):
@@ -111,13 +122,24 @@ def _calls(g: dict, ops: dict, interpret: bool):
         "patchy_forward": (dict(b=b, k=k_units, hj=hj, mj=mj), lambda kw:
                            lambda: patchy_forward(
                                ops["x"], ops["w"], ops["bias"],
-                               ops["mask_hc"], nact, mi, hj, mj,
+                               ops["table"], mi, hj, mj,
                                interpret=interpret, **kw)),
         "patchy_update": (dict(b=b, k=k_units, hj=hj, mj=mj), lambda kw:
                           lambda: patchy_update(
                               ops["pij"], ops["lpi"], ops["lpj"], ops["x"],
-                              ops["y"], ops["mask_hc"], ops["alpha"], nact,
+                              ops["y"], ops["table"], ops["alpha"],
                               mi, hj, mj, interpret=interpret, **kw)),
+        "compact_forward": (dict(b=b, k=k_units, hj=hj, mj=mj), lambda kw:
+                            lambda: compact_forward(
+                                ops["x"], ops["w_c"], ops["bias"],
+                                ops["table"], mi,
+                                interpret=interpret, **kw)),
+        "compact_update": (dict(b=b, k=k_units, hj=hj, mj=mj), lambda kw:
+                           lambda: compact_update(
+                               ops["pij_c"], ops["lpi"], ops["lpj"],
+                               ops["x"], ops["y"], ops["table"],
+                               ops["alpha"], mi,
+                               interpret=interpret, **kw)),
     }
 
 

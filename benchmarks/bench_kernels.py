@@ -2,21 +2,29 @@
 patchy-sparse Pallas, per model geometry.
 
 Times one projection's hot-path pair — activation (forward) and
-plasticity (learn) — under the three execution schedules the codebase
-offers (DESIGN.md §3/§7):
+plasticity (learn) — under the execution schedules the codebase offers
+(DESIGN.md §3/§7):
 
   * ``jnp_dense``      — the XLA reference: dense matmul over the masked
                          weights, dense trace EMA + mask multiply;
   * ``pallas_padded``  — the fused dense kernels on pad-to-aligned tiles
                          (the pre-patchy production path);
-  * ``pallas_patchy``  — the compact patchy kernels streaming only the
-                         nact live pre-blocks per post-HC
-                         (``patchy_traces`` plasticity semantics).
+  * ``pallas_patchy``  — the COMPACT-RESIDENT patchy path
+                         (``ProjSpec.compact``): state lives as
+                         (Hj, K, Mj), the learn kernel is scatter-free —
+                         the production patchy schedule;
+  * ``pallas_patchy_scatter`` — the dense-resident patchy path
+                         (``patchy_traces`` without ``compact``): the
+                         same compact kernels but paying the per-step
+                         O(Ni·Nj) gather/scatter round-trip, kept as the
+                         cost-of-the-dense-layout data point.
 
 Emits ``name,value,unit`` CSV rows plus a ``BENCH_kernels.json`` dump so
-the perf trajectory has machine-readable data points.  By default the
-paper geometries are scaled down by ``--scale`` (the CPU interpreter pays
-per-tile Python overhead; the nact/Hi sparsity ratio is preserved, so the
+the perf trajectory has machine-readable data points
+(``benchmarks/run.py --assert-patchy-speedup`` gates CI on the
+patchy-vs-padded ratio recorded here).  By default the paper geometries
+are scaled down by ``--scale`` (the CPU interpreter pays per-tile Python
+overhead; the nact/Hi sparsity ratio is preserved, so the
 patchy-vs-dense proportionality claim is still measured); pass
 ``--scale 1`` on real hardware.
 """
@@ -69,30 +77,43 @@ def bench_geometry(name: str, g: dict, iters: int, csv: bool) -> dict:
     post = LayerGeom(g["hj"], g["mj"])
     nact = min(g["nact"], g["hi"])
     spec_jnp = ProjSpec(pre, post, alpha=1e-2, nact=nact, backend="jnp")
-    spec_patchy = ProjSpec(pre, post, alpha=1e-2, nact=nact,
-                           backend="pallas", patchy_traces=True)
-    spec_dense = dataclasses.replace(spec_patchy, patchy_traces=False)
+    spec_scatter = ProjSpec(pre, post, alpha=1e-2, nact=nact,
+                            backend="pallas", patchy_traces=True)
+    spec_compact = dataclasses.replace(spec_scatter, compact=True)
+    spec_dense = dataclasses.replace(spec_scatter, patchy_traces=False)
     proj = init_projection(spec_jnp, jax.random.PRNGKey(0))
+    from repro.core.compact import compactify_projection
+    proj_c = compactify_projection(proj, spec_compact)
     x = jax.random.uniform(jax.random.PRNGKey(1), (g["b"], pre.N))
     y = forward(proj, spec_jnp, x)
 
     schedules = {
         # XLA reference: dense masked matmul + dense EMA with mask multiply
         "jnp_dense": (
+            proj,
             jax.jit(lambda p, xb: forward(p, spec_jnp, xb)),
             jax.jit(lambda p, xb, yb: learn(p, spec_jnp, xb, yb)),
         ),
         # fused dense kernels on padded-aligned tiles (mask streamed in);
         # bcpnn_fwd directly so the nact spec doesn't divert to patchy
         "pallas_padded": (
+            proj,
             jax.jit(lambda p, xb: bcpnn_fwd(
                 xb, p.w, p.b, post.H, post.M, spec_jnp.gain)),
             jax.jit(lambda p, xb, yb: fused_learn(p, spec_dense, xb, yb)),
         ),
-        # compact patchy kernels: only live pre-blocks stream
+        # compact-RESIDENT patchy: scatter-free in-place kernels (the
+        # production patchy schedule)
         "pallas_patchy": (
-            jax.jit(lambda p, xb: fused_forward(p, spec_patchy, xb)),
-            jax.jit(lambda p, xb, yb: fused_learn(p, spec_patchy, xb, yb)),
+            proj_c,
+            jax.jit(lambda p, xb: fused_forward(p, spec_compact, xb)),
+            jax.jit(lambda p, xb, yb: fused_learn(p, spec_compact, xb, yb)),
+        ),
+        # dense-resident patchy: same kernels + the O(Ni·Nj) round-trip
+        "pallas_patchy_scatter": (
+            proj,
+            jax.jit(lambda p, xb: fused_forward(p, spec_scatter, xb)),
+            jax.jit(lambda p, xb, yb: fused_learn(p, spec_scatter, xb, yb)),
         ),
     }
     row = {"b": g["b"], "ni": pre.N, "nj": post.N, "hi": g["hi"],
@@ -102,9 +123,9 @@ def bench_geometry(name: str, g: dict, iters: int, csv: bool) -> dict:
            # schedule only the nact live pre-blocks — ratio = Hi/nact.
            "model_flops_dense": 4 * g["b"] * pre.N * post.N,
            "model_flops_patchy": 4 * g["b"] * nact * g["mi"] * post.N}
-    for sched, (fwd, lrn) in schedules.items():
-        t_f = _time(fwd, proj, x, iters=iters)
-        t_l = _time(lrn, proj, x, y, iters=iters)
+    for sched, (p0, fwd, lrn) in schedules.items():
+        t_f = _time(fwd, p0, x, iters=iters)
+        t_l = _time(lrn, p0, x, y, iters=iters)
         step = t_f + t_l
         row[sched] = {"fwd_ms": t_f * 1e3, "learn_ms": t_l * 1e3,
                       "step_ms": step * 1e3,
@@ -115,6 +136,9 @@ def bench_geometry(name: str, g: dict, iters: int, csv: bool) -> dict:
                   f"{g['b']/step:.0f},images_per_s")
     row["patchy_speedup_vs_padded"] = (
         row["pallas_padded"]["step_ms"] / row["pallas_patchy"]["step_ms"])
+    row["compact_speedup_vs_scatter"] = (
+        row["pallas_patchy_scatter"]["step_ms"]
+        / row["pallas_patchy"]["step_ms"])
     if csv:
         print(f"bench_kernels_{name},"
               f"{row['patchy_speedup_vs_padded']:.2f},patchy_speedup_x")

@@ -1,0 +1,97 @@
+"""One-shot dense -> compact-resident checkpoint migration.
+
+Rewrites a checkpoint whose patchy-trace projections store dense
+(Ni, Nj) joint traces/weights into the compact-resident (Hj, K, Mj)
+layout (ProjSpec.compact, DESIGN.md §7), updating the spec stored in the
+manifest so servers and trainers rebuild the compact network from the
+migrated directory alone.  Inference over the migrated state is
+bit-identical: the compact forward kernels see exactly the operands the
+dense-resident patchy path gathered per call.  Silent synapses' stale
+held trace values are dropped — under the compact semantics they are the
+independence product, which is also what a post-migration ``rewire``
+ranks them as (0 MI).
+
+    PYTHONPATH=src python scripts/migrate_ckpt.py \
+        --ckpt runs/model1 --out runs/model1_compact [--step N]
+
+The source checkpoint must carry its NetworkSpec in the manifest
+(``Trainer.save`` does this); pre-spec checkpoints cannot be migrated
+blind — retrain or re-save them first.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def _leaf_bytes(tree) -> int:
+    import jax
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--ckpt", required=True,
+                    help="source checkpoint directory (CheckpointManager "
+                         "layout, spec in the manifest)")
+    ap.add_argument("--out", required=True,
+                    help="destination directory for the migrated checkpoint")
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step to migrate (default: latest)")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.checkpoint import CheckpointManager
+    from repro.core.bcpnn_layer import validate_patchy_state
+    from repro.core.compact import compactify_state
+    from repro.core.network import init_deep, spec_from_dict, spec_to_dict
+
+    src = CheckpointManager(args.ckpt)
+    step = args.step if args.step is not None else src.latest_step()
+    if step is None:
+        print(f"migrate_ckpt: no checkpoints under {args.ckpt}",
+              file=sys.stderr)
+        return 2
+    extra = src.read_extra(step) or {}
+    if "spec" not in extra:
+        print(f"migrate_ckpt: step_{step} has no NetworkSpec in its "
+              f"manifest (extra['spec']); re-save it with Trainer.save "
+              f"before migrating", file=sys.stderr)
+        return 2
+    spec = spec_from_dict(extra["spec"])
+    eligible = [i for i, p in enumerate(spec.projs)
+                if p.patchy_traces and not p.compact
+                and p.nact is not None and p.nact < p.pre.H]
+    if not eligible:
+        print("migrate_ckpt: no dense-resident patchy-trace projections to "
+              "migrate (need patchy_traces=True, a binding nact, and "
+              "compact=False)", file=sys.stderr)
+        return 2
+
+    state = src.restore(step, init_deep(spec, jax.random.PRNGKey(0)))
+    before = _leaf_bytes(state)
+    new_state, new_spec = compactify_state(state, spec)
+    for l in eligible:
+        validate_patchy_state(new_state.projs[l], new_spec.projs[l],
+                              where=f"migrated stack proj {l}")
+    after = _leaf_bytes(new_state)
+
+    dst = CheckpointManager(args.out)
+    dst.save(step, new_state, blocking=True,
+             extra={**extra, "spec": spec_to_dict(new_spec)})
+    for l in eligible:
+        p = new_spec.projs[l]
+        print(f"migrate_ckpt: proj {l}: (Ni={p.pre.N}, Nj={p.post.N}) dense "
+              f"-> (Hj={p.post.H}, K={p.nact * p.pre.M}, Mj={p.post.M}) "
+              f"compact")
+    print(f"migrate_ckpt: step_{step} {args.ckpt} -> {args.out}; state "
+          f"bytes {before} -> {after} "
+          f"({100.0 * (before - after) / max(1, before):.1f}% smaller)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -149,17 +149,34 @@ class CheckpointManager:
                            if len(items) > 5 else ""))
             detail = "; ".join(_fmt(k, v) for k, v in
                                (("missing", missing), ("extra", extra)) if v)
+            hint = ""
+            # A table leaf present on one side only is the signature of a
+            # dense<->compact patchy layout mismatch, not a different
+            # network: name the one-shot fix instead of a generic error.
+            if any(n.endswith("table") for n in missing + extra):
+                hint = (" — this looks like a dense vs compact-resident "
+                        "patchy layout mismatch (ProjSpec.compact): migrate "
+                        "the checkpoint with scripts/migrate_ckpt.py, or "
+                        "restore with the spec the checkpoint was saved "
+                        "under (manifest extra['spec'])")
             raise ValueError(
                 f"checkpoint step_{step} does not match the target "
                 f"structure (e.g. a different network depth/geometry): "
-                f"{detail}")
+                f"{detail}{hint}")
         out = []
         for name, ref, shd in zip(names, leaves, shard_leaves):
             a = arrays[name]
             if tuple(a.shape) != tuple(ref.shape):
+                hint = ""
+                if a.ndim != ref.ndim and {a.ndim, ref.ndim} == {2, 3}:
+                    hint = (" — a 2-D vs 3-D trace/weight leaf means the "
+                            "checkpoint and target disagree on the patchy "
+                            "state layout (dense (Ni, Nj) vs "
+                            "compact-resident (Hj, K, Mj)); migrate with "
+                            "scripts/migrate_ckpt.py")
                 raise ValueError(
                     f"checkpoint leaf {name!r} has shape {tuple(a.shape)}, "
-                    f"target expects {tuple(ref.shape)}")
+                    f"target expects {tuple(ref.shape)}{hint}")
             a = jax.numpy.asarray(a).astype(ref.dtype)
             out.append(jax.device_put(a, shd) if shd is not None else a)
         return jax.tree_util.tree_unflatten(treedef, out)

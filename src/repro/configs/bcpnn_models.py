@@ -78,11 +78,19 @@ def deep_synth_spec(side: int = 12, depth: int = 2, n_classes: int = 5,
                     backend: str = "jnp", hidden_hc: int = 16,
                     hidden_mc: int = 32,
                     nact: Optional[Sequence[Optional[int]]] = None,
-                    alpha: float = 1e-2) -> NetworkSpec:
+                    alpha: float = 1e-2, patchy_traces: bool = False,
+                    compact: bool = False,
+                    struct_every: int = 0) -> NetworkSpec:
     """Deep stack sized for the synthetic surrogate datasets (tests, CI,
-    benchmarks): side*side*2 input, ``depth`` hidden layers."""
+    benchmarks): side*side*2 input, ``depth`` hidden layers.
+    ``patchy_traces``/``compact`` opt nact-budgeted projections into
+    patchy plasticity and the compact-resident state layout;
+    ``struct_every`` enables structural plasticity (without it a patchy
+    mask stays at its random init, which caps what the stack can learn)."""
     hidden = [LayerGeom(hidden_hc, hidden_mc)] * depth
     return make_network_spec(
         LayerGeom(side * side, 2), hidden, n_classes=n_classes, alpha=alpha,
         nact=nact, backend=backend, support_noise=3.0, noise_steps=200,
+        patchy_traces=patchy_traces, compact=compact,
+        struct_every=struct_every,
     )

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from .hypercolumns import LayerGeom, hc_softmax
-from .traces import Traces, init_traces, mutual_information, update_traces, weights_from_traces
+from .traces import Traces, init_traces, mutual_information, weights_from_traces
 
 BACKENDS = ("jnp", "pallas")
 
@@ -51,14 +51,22 @@ class ProjSpec:
     support_noise: float = 0.0  # exploration noise amplitude (unsup. only)
     noise_steps: int = 0       # anneal horizon in trace updates
     struct_every: int = 0      # rewire period in trace updates (0 = off)
-    patchy_traces: bool = False  # patchy plasticity: silent synapses hold
-    #                              their joint trace instead of tracking the
-    #                              full dense co-activation (DESIGN.md §7)
+    patchy_traces: bool = False  # patchy plasticity: silent synapses carry
+    #                              no dense joint trace (DESIGN.md §7)
+    compact: bool = False      # compact-RESIDENT state: pij/w stored as
+    #                            (Hj, K, Mj) + index-table leaf; the learn
+    #                            path never materializes (Ni, Nj)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected one of {BACKENDS}")
+        if self.compact and not (self.patchy_traces and is_patchy(self)):
+            raise ValueError(
+                "ProjSpec.compact requires patchy_traces=True and a binding "
+                f"nact budget (got nact={self.nact}, pre.H={self.pre.H}, "
+                f"patchy_traces={self.patchy_traces}); only nact-budgeted "
+                "patchy-trace projections have a compact (Hj, K, Mj) form")
 
     def with_backend(self, backend: str) -> "ProjSpec":
         return dataclasses.replace(self, backend=backend)
@@ -67,17 +75,38 @@ class ProjSpec:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Projection:
-    """Learnable state of a projection (a pytree)."""
+    """Learnable state of a projection (a pytree).
+
+    Two layouts share this container (DESIGN.md §7): the dense layout
+    (``w``/``traces.pij`` are (Ni, Nj), ``table`` is None) and the
+    compact-resident layout of ``ProjSpec.compact`` projections
+    (``w``/``traces.pij`` are (Hj, K, Mj) with K = nact·Mi, and ``table``
+    holds the (Hj, nact) active-pre-HC indices — persistent state, rebuilt
+    only by ``rewire``).
+    """
 
     traces: Traces
-    w: jax.Array     # (Ni, Nj) masked log-odds weights
+    w: jax.Array     # (Ni, Nj) masked | (Hj, K, Mj) compact log-odds weights
     b: jax.Array     # (Nj,)    log-prior biases
     mask: jax.Array  # (Hi, Hj) float {0,1} structural connectivity
+    table: Optional[jax.Array] = None  # (Hj, nact) int32, compact only
 
 
 def is_patchy(spec: ProjSpec) -> bool:
     """True when the projection has a binding connectivity budget."""
     return spec.nact is not None and spec.nact < spec.pre.H
+
+
+def is_compact(spec: ProjSpec) -> bool:
+    """True when the projection keeps its state compact-resident."""
+    return spec.compact
+
+
+def _compact_ops():
+    # Lazy for the same reason as _pallas_ops: core.compact imports this
+    # module for the Projection pytree type.
+    from . import compact
+    return compact
 
 
 def validate_patchy_mask(mask, spec: ProjSpec, where: str = "projection") -> None:
@@ -99,6 +128,44 @@ def validate_patchy_mask(mask, spec: ProjSpec, where: str = "projection") -> Non
             f"exceeding nact={spec.nact}; the compact kernels would drop "
             f"connections. Rebuild the mask with topk_mask (e.g. rewire) "
             f"before serving.")
+
+
+def validate_patchy_state(proj: Projection, spec: ProjSpec,
+                          where: str = "projection") -> None:
+    """Host-side deployment guard over the whole projection state
+    (concrete arrays only — do NOT call under jit): the mask invariant of
+    ``validate_patchy_mask`` plus, for compact-resident projections, that
+    the persistent index table exists, has the compact shapes, and agrees
+    with the mask — a table that drifted from its mask (hand-edited state,
+    a bad migration) would serve through the WRONG synapses silently."""
+    validate_patchy_mask(proj.mask, spec, where=where)
+    if not is_compact(spec):
+        return
+    import numpy as np
+    hj, mj = spec.post.H, spec.post.M
+    k = spec.nact * spec.pre.M
+    if proj.table is None:
+        raise ValueError(
+            f"{where}: compact-resident projection has no index table "
+            f"leaf; was this state built dense? Migrate it with "
+            f"scripts/migrate_ckpt.py.")
+    for name, leaf, want in (("pij", proj.traces.pij, (hj, k, mj)),
+                             ("w", proj.w, (hj, k, mj)),
+                             ("table", proj.table, (hj, spec.nact))):
+        if tuple(leaf.shape) != want:
+            raise ValueError(
+                f"{where}: compact leaf {name} has shape "
+                f"{tuple(leaf.shape)}, expected {want}")
+    mask = np.asarray(jax.device_get(proj.mask))
+    table = np.asarray(jax.device_get(proj.table))
+    for j in range(hj):
+        live = np.flatnonzero(mask[:, j])
+        if not np.array_equal(np.sort(table[j]), live):
+            raise ValueError(
+                f"{where}: compact index table disagrees with the mask at "
+                f"post-HC {j} (table {np.sort(table[j]).tolist()} vs mask "
+                f"{live.tolist()}); rebuild the table from the mask "
+                f"(core.compact.build_table) before serving.")
 
 
 def apply_hc_mask(w: jax.Array, mask: jax.Array, spec: ProjSpec) -> jax.Array:
@@ -157,7 +224,12 @@ def init_projection(spec: ProjSpec, key: jax.Array) -> Projection:
         mask = topk_mask(scores, spec.nact)
     w, b = weights_from_traces(tr, spec.eps)
     w = apply_hc_mask(w, mask, spec)
-    return Projection(traces=tr, w=w, b=b, mask=mask)
+    proj = Projection(traces=tr, w=w, b=b, mask=mask)
+    if is_compact(spec):
+        # Same dense init (same key -> same active values), then gathered:
+        # compact and dense references start in lockstep on active entries.
+        proj = _compact_ops().compactify_projection(proj, spec)
+    return proj
 
 
 # ------------------------------------------------------------- dispatch --
@@ -180,7 +252,12 @@ def support(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
     """Log-domain support only (used by readout/inference and the noisy
     unsupervised path).  A bare matmul has no fusion epilogue to win, so
     both backends share the jnp implementation; it is kept behind the
-    dispatch point so a future support-only kernel slots in here."""
+    dispatch point so a future support-only kernel slots in here.
+    Compact-resident projections contract against the resident (Hj, K,
+    Mj) weights instead of a dense matmul."""
+    if is_compact(spec) and proj.table is not None:
+        return _compact_ops().compact_support(x, proj.w, proj.b, proj.table,
+                                              spec.pre.M)
     return proj.b[None, :] + x @ proj.w
 
 
@@ -196,32 +273,62 @@ def learn(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Proje
     """Plasticity stage: one streaming batch update of traces + weights."""
     if spec.backend == "pallas":
         return _pallas_ops().fused_learn(proj, spec, x, y)
+    if is_compact(spec) and proj.table is not None:
+        return _compact_ops().learn_compact_jnp(proj, spec, x, y)
     return _learn_jnp(proj, spec, x, y)
 
 
 # ------------------------------------------------------ jnp reference ----
 
 def _forward_jnp(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
-    s = proj.b[None, :] + x @ proj.w
+    s = support(proj, spec, x)
     return hc_softmax(s, spec.post, spec.gain)
 
 
-def _learn_jnp(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Projection:
-    tr = update_traces(proj.traces, x, y, spec.alpha)
+def apply_dense_stats(proj: Projection, spec: ProjSpec, xm: jax.Array,
+                      ym: jax.Array, co: jax.Array) -> Projection:
+    """EMA + plasticity semantics + weight fold on dense-layout state from
+    precomputed batch statistics — the single implementation behind
+    ``_learn_jnp`` and the data-parallel step (which all-reduces the
+    stats first, distributed/data_parallel.py), mirroring
+    ``core.compact.apply_compact_stats`` for the compact layout.  Keeping
+    one copy makes the single-device/DP shared-arithmetic guarantee
+    structural."""
+    from .traces import update_traces_from_stats
+
+    tr = update_traces_from_stats(proj.traces, xm, ym, co, spec.alpha)
     if is_patchy(spec) and spec.patchy_traces:
-        # Patchy-trace semantics (DESIGN.md §7): silent synapses HOLD their
-        # last joint-trace value rather than tracking the dense
-        # co-activation — the reference for the compact patchy kernel,
-        # which never computes the masked-out pairs at all.
         hi, mi, hj, mj = spec.pre.H, spec.pre.M, spec.post.H, spec.post.M
         keep = proj.mask[:, None, :, None] > 0
-        pij = jnp.where(keep, tr.pij.reshape(hi, mi, hj, mj),
-                        proj.traces.pij.reshape(hi, mi, hj, mj))
+        if is_compact(spec):
+            # Compact semantics (DESIGN.md §7): a silent synapse carries no
+            # evidence — its joint probability IS the independence product
+            # p_i·p_j (weight 0), recomputed from the current marginals, so
+            # the dense state is a pure function of what the compact layout
+            # stores (and rewire ranks silent HC pairs at exactly 0 MI).
+            off = jnp.outer(tr.pi, tr.pj).reshape(hi, mi, hj, mj)
+        else:
+            # Patchy-held semantics: silent synapses HOLD their last
+            # joint-trace value (the memory-capped hardware model of the
+            # dense-resident patchy path).
+            off = proj.traces.pij.reshape(hi, mi, hj, mj)
+        pij = jnp.where(keep, tr.pij.reshape(hi, mi, hj, mj), off)
         tr = Traces(pi=tr.pi, pj=tr.pj,
                     pij=pij.reshape(spec.pre.N, spec.post.N), t=tr.t)
     w, b = weights_from_traces(tr, spec.eps)
     w = apply_hc_mask(w, proj.mask, spec)
-    return Projection(traces=tr, w=w, b=b, mask=proj.mask)
+    return Projection(traces=tr, w=w, b=b, mask=proj.mask, table=proj.table)
+
+
+def _learn_jnp(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Projection:
+    """Dense-layout reference of all three plasticity semantics: dense
+    traces, patchy-held traces, and (for a ``compact`` spec on a
+    dense-layout state) the compact semantics computed densely — the
+    oracle the scatter-free compact paths are tested against."""
+    x, y = jax.lax.optimization_barrier((x, y))  # see update_traces
+    b = x.shape[0]
+    return apply_dense_stats(proj, spec, jnp.mean(x, axis=0),
+                             jnp.mean(y, axis=0), (x.T @ y) / b)
 
 
 def rewire(proj: Projection, spec: ProjSpec) -> Projection:
@@ -229,11 +336,18 @@ def rewire(proj: Projection, spec: ProjSpec) -> Projection:
     post-HC.  Fully on-device (beyond-paper: the paper did this on the host
     and paid a measured total-time penalty on small datasets).  Cold path:
     runs every ``struct_every`` steps, so it stays pure jnp on both
-    backends.  The patchy kernels' active-pre-HC index table is derived
-    from ``mask`` on every call (kernels/patchy.py::active_pre_hcs), so the
-    compact layout follows the rewired mask automatically."""
+    backends.  Rewire is also where the patchy index tables turn over:
+    this produces a NEW mask array, which invalidates the identity-keyed
+    table memo of dense-resident projections (core.compact.cached_table),
+    and ``rewire_compact`` rebuilds the persistent table leaf of
+    compact-resident ones — nothing else may rebuild or mutate them.
+    Compact-resident projections densify their joint trace here (the one
+    O(Ni·Nj) touch of the compact layout, on the cold path only) so
+    rewiring ranks over the same MI scores as the dense reference."""
     if spec.nact is None or spec.nact >= spec.pre.H:
         return proj
+    if is_compact(spec) and proj.table is not None:
+        return _compact_ops().rewire_compact(proj, spec)
     mi = mutual_information(
         proj.traces, spec.pre.H, spec.pre.M, spec.post.H, spec.post.M, spec.eps
     )  # (Hi, Hj)

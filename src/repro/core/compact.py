@@ -1,0 +1,320 @@
+"""Compact-resident patchy state: the (Hj, K, Mj) layout and its jnp path.
+
+A patchy projection with an ``nact`` connectivity budget has only
+``K = nact * Mi`` live pre-synaptic units per post-HC.  The paper's
+accelerator keeps exactly that compact window resident on chip; the dense
+emulation (PR 3's ``patchy_traces`` path) kept the joint trace in the
+shared (Ni, Nj) layout and paid an O(Ni·Nj) gather + scatter around every
+compact kernel call.  This module makes the compact layout the *resident*
+state format (``ProjSpec.compact``): ``pij`` and ``w`` are stored as
+``(Hj, K, Mj)``, the ``(Hj, nact)`` active-pre-HC index table is a leaf of
+the projection state (rebuilt only by ``rewire``), and the hot learn path
+never touches an (Ni, Nj) array.
+
+Semantics of the compact state (DESIGN.md §7): a silent synapse carries no
+evidence — its joint probability is *defined* as the independence product
+``p_i · p_j`` (weight exactly 0) rather than a held stale value.  That
+definition is what makes the layout lossless: the dense equivalent of a
+compact state is a pure function of the stored leaves
+(``densify_pij``), so the ``struct_every`` cold path can materialize the
+dense trace, rank HC pairs by mutual information (silent pairs contribute
+exactly 0) and re-gather under the new mask — and a dense-compute jnp
+reference of the same semantics exists for parity tests
+(``core.bcpnn_layer._learn_jnp`` on a dense-layout state with a compact
+spec).  Newly-activated pairs start at independence in both.
+
+Layout conventions shared with ``kernels/patchy.py``:
+
+    table : (Hj, nact) int32, ascending pre-HC indices per post-HC
+    x_g   : (Hj, B, K)   gathered pre-rates (x duplicated per post-HC)
+    pij/w : (Hj, K, Mj)  resident compact matrices
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .traces import Traces, mutual_information
+
+
+# ------------------------------------------------------- index tables ----
+
+def build_table(mask: jax.Array, nact: int) -> jax.Array:
+    """(Hi, Hj) exactly-nact HC mask -> (Hj, nact) int32 table of active
+    pre-HC indices per post-HC, ascending (the compact stream order)."""
+    _, idx = jax.lax.top_k(mask.T, nact)  # (Hj, nact) distinct rows
+    return jnp.sort(idx, axis=1).astype(jnp.int32)
+
+
+# Host-side memo: mask identity -> table.  The compact-resident state
+# carries its table as a leaf (zero rebuilds on the hot path); this cache
+# covers the remaining eager call sites that derive a table from a
+# concrete mask (the dense-resident patchy forward, state conversion,
+# serving validation) so repeated calls on the same mask object do a dict
+# hit instead of a device top_k.  Keys hold the mask only weakly — a
+# dropped state cannot be pinned by the cache.
+_TABLE_CACHE: dict = {}
+_TABLE_CACHE_MAX = 64
+
+
+def cached_table(mask: jax.Array, nact: int) -> jax.Array:
+    """``build_table`` memoized on the identity of a concrete ``mask``.
+
+    Tracers (calls under jit, where the result is part of the traced
+    graph anyway) bypass the cache.  Invalidation is by identity: rewire
+    produces a NEW mask array, so its table is a fresh entry, and the old
+    mask's entry dies with the old state (weakref).
+    """
+    if isinstance(mask, jax.core.Tracer):
+        return build_table(mask, nact)
+    key = (id(mask), nact)
+    hit = _TABLE_CACHE.get(key)
+    if hit is not None:
+        ref, table = hit
+        if ref() is mask:
+            return table
+        del _TABLE_CACHE[key]
+    table = build_table(mask, nact)
+    try:
+        ref = weakref.ref(mask)
+    except TypeError:
+        return table
+    if len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
+        # drop dead entries first, then oldest
+        for k in [k for k, (r, _) in _TABLE_CACHE.items() if r() is None]:
+            del _TABLE_CACHE[k]
+        while len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
+            del _TABLE_CACHE[next(iter(_TABLE_CACHE))]
+    _TABLE_CACHE[key] = (ref, table)
+    return table
+
+
+def unit_indices(table: jax.Array, mi: int, k_pad: int = 0,
+                 sentinel: int = -1) -> jax.Array:
+    """Expand the HC table to unit-level gather indices (Hj, nact*Mi+k_pad).
+    Pad slots carry ``sentinel`` (out of range): gathers fill zeros there
+    and scatters drop them."""
+    hj, nact = table.shape
+    ui = (table[:, :, None] * mi
+          + jnp.arange(mi, dtype=jnp.int32)[None, None, :]).reshape(hj, nact * mi)
+    if k_pad:
+        ui = jnp.concatenate(
+            [ui, jnp.full((hj, k_pad), sentinel, jnp.int32)], axis=1)
+    return ui
+
+
+# --------------------------------------------------- gather / scatter ----
+
+def gather_pre(x: jax.Array, ui: jax.Array) -> jax.Array:
+    """x (B, Ni) -> compact (Hj, B, K): per-post-HC gather of live rates."""
+    xg = jnp.take(x, ui, axis=1, mode="fill", fill_value=0.0)  # (B, Hj, K)
+    return xg.transpose(1, 0, 2)
+
+
+def gather_dense(dense: jax.Array, ui: jax.Array, hj: int, mj: int) -> jax.Array:
+    """dense (Ni, Hj*Mj) -> compact (Hj, K, Mj): each post-HC's column
+    block restricted to its live pre-unit rows (zero fill for pad rows)."""
+    d3 = dense.reshape(dense.shape[0], hj, mj)
+    take = lambda idx, col: jnp.take(col, idx, axis=0, mode="fill",
+                                     fill_value=0.0)
+    return jax.vmap(take, in_axes=(0, 1))(ui, d3)
+
+
+def scatter_dense(base3: jax.Array, ui: jax.Array, vals: jax.Array) -> jax.Array:
+    """Scatter compact (Hj, K, Mj) values into a (Ni, Hj, Mj) base;
+    sentinel rows drop.  Cold-path only (densify / migration)."""
+    put = lambda col, idx, v: col.at[idx].set(v, mode="drop")
+    return jax.vmap(put, in_axes=(1, 0, 0), out_axes=1)(base3, ui, vals)
+
+
+def densify_pij(pij_c: jax.Array, pi: jax.Array, pj: jax.Array,
+                table: jax.Array, mi: int) -> jax.Array:
+    """Dense (Ni, Nj) view of a compact joint trace: active entries from
+    storage, silent entries at the independence product p_i·p_j (their
+    defining value — weight 0, MI contribution exactly 0).  O(Ni·Nj):
+    ``struct_every`` cold path and inspection only."""
+    hj, k, mj = pij_c.shape
+    ni = pi.shape[0]
+    ui = unit_indices(table, mi, sentinel=ni)
+    base = jnp.outer(pi, pj).reshape(ni, hj, mj)
+    return scatter_dense(base, ui, pij_c).reshape(ni, hj * mj)
+
+
+# ----------------------------------------------------- compact compute ----
+
+def compact_support(x: jax.Array, w_c: jax.Array, b: jax.Array,
+                    table: jax.Array, mi: int) -> jax.Array:
+    """Log-domain support from compact weights: gather live pre-rates per
+    post-HC and contract against the resident (Hj, K, Mj) weights."""
+    hj, k, mj = w_c.shape
+    ui = unit_indices(table, mi, sentinel=x.shape[1])
+    xg = gather_pre(x, ui)                              # (Hj, B, K)
+    s3 = jnp.einsum("jbk,jkm->bjm", xg, w_c)
+    return s3.reshape(x.shape[0], hj * mj) + b[None, :]
+
+
+def compact_co_stats(x: jax.Array, y: jax.Array, table: jax.Array,
+                     mi: int, mj: int) -> jax.Array:
+    """Batch-mean compact co-activation ⟨x⊗y⟩ restricted to live pairs:
+    (Hj, K, Mj).  The canonical stat contraction — the data-parallel step
+    computes the same einsum on post-HC shards and all-reduces the
+    disjoint partials (distributed/data_parallel.py)."""
+    x, y = jax.lax.optimization_barrier((x, y))  # one buffer per stat seam
+    b = x.shape[0]
+    hj = table.shape[0]
+    ui = unit_indices(table, mi, sentinel=x.shape[1])
+    xg = gather_pre(x, ui)                              # (Hj, B, K)
+    y3 = y.reshape(b, hj, mj).transpose(1, 0, 2)        # (Hj, B, Mj)
+    return jnp.einsum("jbk,jbm->jkm", xg, y3) / b
+
+
+def fold_weights_compact(pij_c: jax.Array, log_pi: jax.Array,
+                         log_pj: jax.Array, table: jax.Array, mi: int,
+                         eps: float) -> jax.Array:
+    """Bayesian log-odds fold on the compact layout:
+    w = log p_ij − (log p_i + log p_j), all compact-sized."""
+    hj, k, mj = pij_c.shape
+    ui = unit_indices(table, mi, sentinel=log_pi.shape[0])
+    lpi_g = jnp.take(log_pi, ui, axis=0, mode="fill", fill_value=0.0)
+    logp = jnp.log(jnp.clip(pij_c, eps * eps, 1.0))
+    return logp - (lpi_g[:, :, None] + log_pj.reshape(hj, 1, mj))
+
+
+# ------------------------------------------------------- compact learn ----
+
+def apply_compact_stats(proj, spec, xm: jax.Array, ym: jax.Array,
+                        co_c: jax.Array):
+    """EMA + weight fold on compact state from precomputed batch stats.
+
+    Shared by the single-device jnp learn (stats from
+    ``compact_co_stats``) and the data-parallel step (stats from the
+    disjoint-support all-reduce) so both run the identical fold ops.
+    """
+    from .bcpnn_layer import Projection
+    from .traces import update_traces_from_stats
+
+    tr = update_traces_from_stats(proj.traces, xm, ym, co_c, spec.alpha)
+    log_pi = jnp.log(jnp.clip(tr.pi, spec.eps, 1.0))
+    log_pj = jnp.log(jnp.clip(tr.pj, spec.eps, 1.0))
+    w_c = fold_weights_compact(tr.pij, log_pi, log_pj, proj.table,
+                               spec.pre.M, spec.eps)
+    return Projection(traces=tr, w=w_c, b=log_pj, mask=proj.mask,
+                      table=proj.table)
+
+
+def learn_compact_jnp(proj, spec, x: jax.Array, y: jax.Array):
+    """One streaming plasticity step on compact-resident state, pure jnp.
+
+    The jnp-backend production path for ``ProjSpec.compact`` projections
+    (and the shape-reference for the fused kernel): no (Ni, Nj) array is
+    ever materialized — the co-activation, EMA and fold are all
+    (Hj, K, Mj)-sized.
+    """
+    x, y = jax.lax.optimization_barrier((x, y))
+    co_c = compact_co_stats(x, y, proj.table, spec.pre.M, spec.post.M)
+    return apply_compact_stats(proj, spec, jnp.mean(x, axis=0),
+                               jnp.mean(y, axis=0), co_c)
+
+
+# ------------------------------------------------- layout conversions ----
+
+def compactify_projection(proj, spec):
+    """Dense-layout projection -> compact-resident (cold path).
+
+    Active entries of pij/w are gathered; silent pij values are DROPPED —
+    under the compact semantics they are defined as the independence
+    product, so a dense-held state loses its stale silent values here (the
+    held-trace and compact semantics agree on everything the forward pass
+    and the active-entry recursion can observe).
+    """
+    from .bcpnn_layer import Projection
+    hi, mi = spec.pre.H, spec.pre.M
+    hj, mj = spec.post.H, spec.post.M
+    table = cached_table(proj.mask, spec.nact)
+    ui = unit_indices(table, mi, sentinel=spec.pre.N)
+    tr = proj.traces
+    pij_c = gather_dense(tr.pij, ui, hj, mj)
+    w_c = gather_dense(proj.w, ui, hj, mj)
+    return Projection(traces=Traces(pi=tr.pi, pj=tr.pj, pij=pij_c, t=tr.t),
+                      w=w_c, b=proj.b, mask=proj.mask, table=table)
+
+
+def densify_projection(proj, spec):
+    """Compact-resident projection -> dense layout (cold path): pij silent
+    entries at independence, w silent entries at 0 (their exact values
+    under the compact semantics)."""
+    from .bcpnn_layer import Projection
+    mi = spec.pre.M
+    hj, mj = spec.post.H, spec.post.M
+    ni = spec.pre.N
+    tr = proj.traces
+    ui = unit_indices(proj.table, mi, sentinel=ni)
+    pij = densify_pij(tr.pij, tr.pi, tr.pj, proj.table, mi)
+    w = scatter_dense(jnp.zeros((ni, hj, mj), proj.w.dtype), ui,
+                      proj.w).reshape(ni, hj * mj)
+    return Projection(traces=Traces(pi=tr.pi, pj=tr.pj, pij=pij, t=tr.t),
+                      w=w, b=proj.b, mask=proj.mask, table=None)
+
+
+def rewire_compact(proj, spec):
+    """Structural plasticity on compact state — the ``struct_every`` cold
+    path, and the only place the compact layout touches O(Ni·Nj): densify
+    the joint trace (silent pairs at independence -> exactly 0 MI), rank
+    pre-HCs by mutual information, rebuild the mask/table, and re-gather.
+    Newly-activated pairs start at the independence product (weight 0)."""
+    from .bcpnn_layer import Projection, topk_mask
+    hi, mi = spec.pre.H, spec.pre.M
+    hj, mj = spec.post.H, spec.post.M
+    tr = proj.traces
+    pij_dense = densify_pij(tr.pij, tr.pi, tr.pj, proj.table, mi)
+    dense_tr = Traces(pi=tr.pi, pj=tr.pj, pij=pij_dense, t=tr.t)
+    scores = mutual_information(dense_tr, hi, mi, hj, mj, spec.eps)
+    mask = topk_mask(scores, spec.nact)
+    table = build_table(mask, spec.nact)
+    ui = unit_indices(table, mi, sentinel=spec.pre.N)
+    pij_c = gather_dense(pij_dense, ui, hj, mj)
+    log_pi = jnp.log(jnp.clip(tr.pi, spec.eps, 1.0))
+    log_pj = jnp.log(jnp.clip(tr.pj, spec.eps, 1.0))
+    w_c = fold_weights_compact(pij_c, log_pi, log_pj, table, mi, spec.eps)
+    return Projection(traces=Traces(pi=tr.pi, pj=tr.pj, pij=pij_c, t=tr.t),
+                      w=w_c, b=log_pj, mask=mask, table=table)
+
+
+# --------------------------------------------------- state conversions ----
+
+def compact_network_spec(spec):
+    """NetworkSpec with ``compact=True`` on every projection eligible for
+    the compact-resident layout (patchy_traces + a binding nact budget)."""
+    from .bcpnn_layer import is_patchy
+    from .network import NetworkSpec
+
+    def flip(p):
+        if p.patchy_traces and is_patchy(p) and not p.compact:
+            return dataclasses.replace(p, compact=True)
+        return p
+
+    return NetworkSpec(projs=tuple(flip(p) for p in spec.projs),
+                       readout=flip(spec.readout))
+
+
+def compactify_state(state, spec) -> Tuple[object, object]:
+    """(DeepState, NetworkSpec) with every eligible projection converted
+    to the compact-resident layout.  Used by ``scripts/migrate_ckpt.py``
+    and tests; inference over the converted state is bit-identical (the
+    forward kernels see the same gathered operands either way)."""
+    from .bcpnn_layer import is_compact
+    from .network import DeepState, as_spec
+
+    spec = as_spec(spec)
+    new_spec = compact_network_spec(spec)
+    projs = tuple(
+        compactify_projection(p, ps) if is_compact(ps) else p
+        for p, ps in zip(state.projs, new_spec.projs))
+    readout = (compactify_projection(state.readout, new_spec.readout)
+               if is_compact(new_spec.readout) else state.readout)
+    return DeepState(projs=projs, readout=readout, step=state.step,
+                     key=state.key), new_spec

@@ -114,12 +114,14 @@ def make_network_spec(
     noise_steps: int = 500,
     struct_every: int = 0,
     patchy_traces: bool = False,
+    compact: bool = False,
 ) -> NetworkSpec:
     """Build a NetworkSpec for a stack of ``len(hidden)`` hidden layers.
 
     ``nact`` (optional) gives the patchy-connectivity budget per stack
     projection (None entries = dense); ``patchy_traces`` opts those
-    projections into compact patchy plasticity (DESIGN.md §7).  The
+    projections into patchy plasticity and ``compact`` additionally into
+    the compact-resident (Hj, K, Mj) state layout (DESIGN.md §7).  The
     training knobs apply to every stack projection; per-projection
     overrides go through ``dataclasses.replace`` on the result.
     """
@@ -128,12 +130,24 @@ def make_network_spec(
     if len(nacts) != len(geoms) - 1:
         raise ValueError(f"nact has {len(nacts)} entries for "
                          f"{len(geoms) - 1} projections")
+    # compact applies per projection (dense entries of a mixed-nact stack
+    # stay dense), but a request that can apply NOWHERE is a misconfig —
+    # fail like a direct ProjSpec(compact=True) would, don't silently
+    # build an all-dense network.
+    eligible = [na is not None and na < pre.H
+                for pre, na in zip(geoms[:-1], nacts)]
+    if compact and not (patchy_traces and any(eligible)):
+        raise ValueError(
+            "compact=True requires patchy_traces=True and at least one "
+            f"projection with a binding nact budget (nact={nacts})")
     projs = tuple(
         ProjSpec(pre, post, alpha=alpha, eps=eps, gain=gain, nact=na,
                  backend=backend, support_noise=support_noise,
                  noise_steps=noise_steps, struct_every=struct_every,
-                 patchy_traces=patchy_traces)
-        for pre, post, na in zip(geoms[:-1], geoms[1:], nacts)
+                 patchy_traces=patchy_traces,
+                 compact=compact and patchy_traces and ok)
+        for (pre, post, na), ok in zip(
+            zip(geoms[:-1], geoms[1:], nacts), eligible)
     )
     readout = ProjSpec(geoms[-1], LayerGeom(1, n_classes), alpha=alpha,
                        eps=eps, gain=gain, nact=None, backend=backend)
@@ -203,7 +217,13 @@ def _noisy_rates(proj: Projection, pspec: ProjSpec, h: jax.Array,
     t = proj.traces.t.astype(jnp.float32)
     amp = pspec.support_noise * jnp.maximum(
         0.0, 1.0 - t / max(1, pspec.noise_steps))
-    s = s + amp * jax.random.normal(key, s.shape, s.dtype)
+    # Pin the noise draw and the scaled product: the erfinv chain and the
+    # mul are otherwise duplicated/FMA-contracted per consumer fusion,
+    # which breaks bit-reproducibility against the data-parallel step's
+    # column-sliced noise (distributed/data_parallel.py mirrors this).
+    noise = jax.lax.optimization_barrier(
+        jax.random.normal(key, s.shape, s.dtype))
+    s = s + jax.lax.optimization_barrier(amp * noise)
     return normalize(s, pspec)
 
 
@@ -294,7 +314,8 @@ class BCPNNConfig:
     support_noise: float = 3.0
     noise_steps: int = 500
     backend: str = "jnp"   # backend for both projections
-    patchy_traces: bool = False  # compact patchy plasticity on the ih projection
+    patchy_traces: bool = False  # patchy plasticity on the ih projection
+    compact: bool = False  # compact-resident ih state (requires patchy_traces)
 
     @property
     def input_geom(self) -> LayerGeom:
@@ -310,13 +331,21 @@ class BCPNNConfig:
         return LayerGeom(1, self.n_classes)
 
     def ih_spec(self) -> ProjSpec:
+        if self.compact and not (self.patchy_traces
+                                 and self.nact_hi < self.input_hc):
+            raise ValueError(
+                "BCPNNConfig.compact requires patchy_traces=True and "
+                f"nact_hi < input_hc (got patchy_traces="
+                f"{self.patchy_traces}, nact_hi={self.nact_hi}, "
+                f"input_hc={self.input_hc})")
         return ProjSpec(self.input_geom, self.hidden_geom, alpha=self.alpha,
                         eps=self.eps, gain=self.gain, nact=self.nact_hi,
                         backend=self.backend,
                         support_noise=self.support_noise,
                         noise_steps=self.noise_steps,
                         struct_every=self.struct_every,
-                        patchy_traces=self.patchy_traces)
+                        patchy_traces=self.patchy_traces,
+                        compact=self.compact)
 
     def ho_spec(self) -> ProjSpec:
         return ProjSpec(self.hidden_geom, self.output_geom, alpha=self.alpha,

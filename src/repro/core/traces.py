@@ -52,22 +52,30 @@ def init_traces(ni: int, nj: int, mi: int, mj: int, dtype=jnp.float32,
     )
 
 
-def update_traces(tr: Traces, x: jax.Array, y: jax.Array, alpha: float) -> Traces:
-    """One streaming step of the Hebbian-Bayesian trace update.
-
-    x: (B, Ni) pre-synaptic rates; y: (B, Nj) post-synaptic rates.
-    The batch-mean co-activation ⟨x⊗y⟩ = XᵀY / B is an MXU matmul — the TPU
-    analogue of the FPGA's joint-probability accumulation stream.
+def update_traces_from_stats(tr: Traces, xm: jax.Array, ym: jax.Array,
+                             co: jax.Array, alpha: float) -> Traces:
+    """EMA step from precomputed batch statistics (means + batch-mean
+    co-activation).  ``co`` may be the dense (Ni, Nj) matrix or the
+    compact (Hj, K, Mj) layout — the EMA is shape-agnostic as long as it
+    matches ``tr.pij``.  Split out of ``update_traces`` so the
+    data-parallel step (which all-reduces the stats across devices,
+    distributed/data_parallel.py) applies the bit-identical fold.
 
     The effective smoothing is ``max(1/(t+1), alpha)``: a true running mean
     while young (bias correction away from the uniform prior — crucial for
     the single supervised pass of the paper's protocol), annealing into the
     fixed-time-constant EMA of the streaming regime.
+
+    The stats are pinned behind an ``optimization_barrier``: XLA freely
+    duplicates cheap elementwise producers into consumer fusions and
+    contracts mul+add chains to FMA per fusion kernel, so without a pin
+    the "same" statistic can round differently in two different programs.
+    Pinning the seam makes the EMA arithmetic bit-identical between the
+    single-device step and the data-parallel decomposition
+    (distributed/data_parallel.py), at the cost of materializing three
+    buffers that the co-activation matmul materializes anyway.
     """
-    b = x.shape[0]
-    xm = jnp.mean(x, axis=0)
-    ym = jnp.mean(y, axis=0)
-    co = (x.T @ y) / b
+    xm, ym, co = jax.lax.optimization_barrier((xm, ym, co))
     a = jnp.maximum(1.0 / (tr.t.astype(tr.pij.dtype) + 1.0),
                     jnp.asarray(alpha, tr.pij.dtype))
     one = 1.0 - a
@@ -77,6 +85,24 @@ def update_traces(tr: Traces, x: jax.Array, y: jax.Array, alpha: float) -> Trace
         pij=one * tr.pij + a * co,
         t=tr.t + 1,
     )
+
+
+def update_traces(tr: Traces, x: jax.Array, y: jax.Array, alpha: float) -> Traces:
+    """One streaming step of the Hebbian-Bayesian trace update.
+
+    x: (B, Ni) pre-synaptic rates; y: (B, Nj) post-synaptic rates.
+    The batch-mean co-activation ⟨x⊗y⟩ = XᵀY / B is an MXU matmul — the TPU
+    analogue of the FPGA's joint-probability accumulation stream.
+
+    x and y are pinned first so every statistic reads the one materialized
+    buffer (XLA would otherwise duplicate a cheap producer — e.g. a
+    softmax chain — into the mean's fusion with its own rounding; see
+    ``update_traces_from_stats``).
+    """
+    x, y = jax.lax.optimization_barrier((x, y))
+    b = x.shape[0]
+    return update_traces_from_stats(
+        tr, jnp.mean(x, axis=0), jnp.mean(y, axis=0), (x.T @ y) / b, alpha)
 
 
 def weights_from_traces(

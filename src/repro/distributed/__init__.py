@@ -1,3 +1,6 @@
 from .sharding import (DEFAULT_RULES, data_shards, make_rules, named_sharding,
-                       set_context, shard, sharding_context, spec_for)
+                       projection_shardings, set_context, shard,
+                       sharding_context, spec_for)
+from .data_parallel import (make_data_parallel_supervised_step,
+                            make_data_parallel_unsupervised_step)
 from .fault import StepTimer, describe_failure_domains, elastic_mesh

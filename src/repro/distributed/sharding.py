@@ -43,6 +43,12 @@ DEFAULT_RULES: Dict[str, Axis] = {
     # trace EMA are local (no cross-device normalization traffic).
     "proj_pre": "model",
     "proj_post": None,
+    # Compact-resident patchy leaves (ProjSpec.compact): the (Hj, K, Mj)
+    # trace/weight tensors and the (Hj, nact) index table shard along the
+    # leading post-HC axis — each device owns whole post-HCs with their
+    # full compact synapse windows, like the FPGA's per-HC datapath; K and
+    # Mj stay whole so the gather and per-HC softmax are device-local.
+    "proj_hj": "model",
 }
 
 
@@ -119,16 +125,25 @@ def named_sharding(dims: Sequence[Axis], shape: Sequence[int]) -> Optional[Named
 
 def projection_shardings(state) -> Optional[object]:
     """NamedSharding pytree for a BCPNN ``DeepState`` (or any pytree of
-    ``Projection``s): 2-D leaves — w, p_ij, the HC mask — shard along the
-    pre-synaptic axis ("proj_pre"); vectors and scalars replicate.  Feed
-    the result to ``CheckpointManager.restore`` or ``jax.device_put`` for
-    per-projection placement.  Returns None outside a sharding context."""
+    ``Projection``s): dense 2-D leaves — w, p_ij, the HC mask — shard
+    along the pre-synaptic axis ("proj_pre"); compact-resident leaves —
+    3-D (Hj, K, Mj) traces/weights and the integer (Hj, nact) index
+    table — shard along the post-HC axis ("proj_hj"); vectors and scalars
+    replicate.  Feed the result to ``CheckpointManager.restore`` or
+    ``jax.device_put`` for per-projection placement.  Returns None
+    outside a sharding context."""
+    import numpy as np
+
     mesh = _CTX["mesh"]
     if mesh is None:
         return None
 
     def leaf_sharding(x):
+        if getattr(x, "ndim", 0) == 3:
+            return named_sharding(("proj_hj", None, None), x.shape)
         if getattr(x, "ndim", 0) == 2:
+            if np.issubdtype(x.dtype, np.integer):
+                return named_sharding(("proj_hj", None), x.shape)
             return named_sharding(("proj_pre", "proj_post"), x.shape)
         return NamedSharding(mesh, P())
 

@@ -5,11 +5,13 @@ projections stream a compact gathered layout (patchy.py); block sizes
 come from the autotune cache (tuning.py) unless the caller overrides.
 """
 from .ops import bcpnn_fwd, bcpnn_update, fused_forward, fused_learn, hc_softmax
-from .patchy import active_pre_hcs, patchy_forward, patchy_update
+from .patchy import (active_pre_hcs, compact_forward, compact_update,
+                     patchy_forward, patchy_update)
 from .ref import ref_bcpnn_fwd, ref_bcpnn_update, ref_hc_softmax
 
 __all__ = [
     "bcpnn_fwd", "bcpnn_update", "fused_forward", "fused_learn", "hc_softmax",
     "active_pre_hcs", "patchy_forward", "patchy_update",
+    "compact_forward", "compact_update",
     "ref_bcpnn_fwd", "ref_bcpnn_update", "ref_hc_softmax",
 ]

@@ -29,13 +29,16 @@ import os
 import jax
 import jax.numpy as jnp
 
-from ..core.bcpnn_layer import Projection, ProjSpec, expand_hc_mask, is_patchy
+from ..core.bcpnn_layer import (
+    Projection, ProjSpec, expand_hc_mask, is_compact, is_patchy,
+)
+from ..core.compact import cached_table
 from ..core.traces import Traces
 from . import tuning
 from .bcpnn_fwd import bcpnn_fwd_pallas
 from .bcpnn_update import bcpnn_update_pallas
 from .hc_softmax import hc_softmax_pallas
-from .patchy import patchy_forward, patchy_update
+from .patchy import compact_forward, compact_update, patchy_forward, patchy_update
 
 # Force interpret mode on ("1") or off ("0") regardless of the detected
 # backend — tests and CI pin the interpreter explicitly with this.
@@ -63,6 +66,8 @@ _KERNEL_BLOCKS = {
     "bcpnn_update": ("block_i", "block_j", "block_k"),
     "patchy_forward": ("block_b", "block_k"),
     "patchy_update": ("block_i", "block_k"),
+    "compact_forward": ("block_b", "block_k"),
+    "compact_update": ("block_i", "block_k"),
 }
 
 
@@ -105,13 +110,23 @@ def fused_forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
     """Kernel-fused equivalent of core.bcpnn_layer.forward.
 
     Patchy projections stream only the live pre-blocks (exact: masked-out
-    weights are zero, so the skipped work contributes nothing)."""
+    weights are zero, so the skipped work contributes nothing).
+    Compact-resident projections additionally skip the per-call weight
+    gather: the resident (Hj, K, Mj) weights and the persistent index
+    table feed the kernel directly."""
+    if is_compact(spec) and proj.table is not None:
+        kw = _blocks("compact_forward", {}, b=x.shape[0],
+                     k=spec.nact * spec.pre.M, hj=spec.post.H,
+                     mj=spec.post.M)
+        return compact_forward(x, proj.w, proj.b, proj.table, spec.pre.M,
+                               spec.gain, interpret=_interpret(), **kw)
     if is_patchy(spec):
         kw = _blocks("patchy_forward", {}, b=x.shape[0],
                      k=spec.nact * spec.pre.M, hj=spec.post.H,
                      mj=spec.post.M)
+        table = cached_table(proj.mask, spec.nact)
         return patchy_forward(
-            x, proj.w, proj.b, proj.mask, spec.nact, spec.pre.M,
+            x, proj.w, proj.b, table, spec.pre.M,
             spec.post.H, spec.post.M, spec.gain,
             interpret=_interpret(), **kw)
     return bcpnn_fwd(x, proj.w, proj.b, spec.post.H, spec.post.M, spec.gain)
@@ -132,12 +147,29 @@ def fused_learn(proj: Projection, spec: ProjSpec, x: jax.Array,
     pj = (1.0 - a) * tr.pj + a * jnp.mean(y, axis=0)
     log_pi = jnp.log(jnp.clip(pi, spec.eps, 1.0))
     log_pj = jnp.log(jnp.clip(pj, spec.eps, 1.0))
-    if is_patchy(spec) and spec.patchy_traces:
+    if is_compact(spec) and proj.table is None:
+        raise ValueError(
+            "fused_learn: ProjSpec.compact projection carries a dense-layout "
+            "state (no index-table leaf); convert it with "
+            "core.compact.compactify_state (or scripts/migrate_ckpt.py) — "
+            "the dense-compute reference of the compact semantics lives on "
+            "the jnp backend only")
+    if is_compact(spec):
+        # Scatter-free hot path: the kernel reads and writes the resident
+        # compact trace/weights — zero O(Ni·Nj) work per step.
+        kw = _blocks("compact_update", {}, b=x.shape[0],
+                     k=spec.nact * spec.pre.M, hj=spec.post.H,
+                     mj=spec.post.M)
+        new_pij, w = compact_update(
+            tr.pij, log_pi, log_pj, x, y, proj.table, a, spec.pre.M,
+            eps=spec.eps, interpret=_interpret(), **kw)
+    elif is_patchy(spec) and spec.patchy_traces:
         kw = _blocks("patchy_update", {}, b=x.shape[0],
                      k=spec.nact * spec.pre.M, hj=spec.post.H,
                      mj=spec.post.M)
+        table = cached_table(proj.mask, spec.nact)
         new_pij, w = patchy_update(
-            tr.pij, log_pi, log_pj, x, y, proj.mask, a, spec.nact,
+            tr.pij, log_pi, log_pj, x, y, table, a,
             spec.pre.M, spec.post.H, spec.post.M, eps=spec.eps,
             interpret=_interpret(), **kw)
     else:
@@ -147,5 +179,5 @@ def fused_learn(proj: Projection, spec: ProjSpec, x: jax.Array,
     b = log_pj
     return Projection(
         traces=Traces(pi=pi, pj=pj, pij=new_pij, t=tr.t + 1),
-        w=w, b=b, mask=proj.mask,
+        w=w, b=b, mask=proj.mask, table=proj.table,
     )

@@ -16,13 +16,31 @@ import jax.numpy as jnp
 from .tiling import HCPadSpec
 
 
+def clamp_fill(value: float, dtype) -> float:
+    """Clamp a pad fill to the target dtype's finite range.
+
+    The softmax sentinel ``tiling.NEG`` (-1e30) is chosen for f32/bf16; a
+    narrower float (the planned bf16/f16 cast-on-fold serving mode,
+    ROADMAP §bf16) would overflow it to -inf on cast — and an all-pad HC
+    then computes ``-inf - max(-inf) = NaN`` inside the softmax.
+    ``finfo(dtype).min`` keeps the fill finite (exp still underflows to
+    exactly 0, so pad lanes stay inert) and NaN-free for every dtype.
+    """
+    dtype = jnp.dtype(dtype)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        return value
+    info = jnp.finfo(dtype)
+    return float(min(max(value, float(info.min)), float(info.max)))
+
+
 def pad_axis(x: jax.Array, axis: int, pad: int, value: float = 0.0) -> jax.Array:
-    """Pad one axis of ``x`` at the end with ``pad`` entries of ``value``."""
+    """Pad one axis of ``x`` at the end with ``pad`` entries of ``value``
+    (clamped to the dtype's finite range — see ``clamp_fill``)."""
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis % x.ndim] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+    return jnp.pad(x, widths, constant_values=clamp_fill(value, x.dtype))
 
 
 def pad_hc_axis(x: jax.Array, axis: int, hs: HCPadSpec,
@@ -38,7 +56,7 @@ def pad_hc_axis(x: jax.Array, axis: int, hs: HCPadSpec,
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, hs.hc.pad)
     widths[axis + 1] = (0, hs.mc_padded - hs.n_mc)
-    x = jnp.pad(x, widths, constant_values=value)
+    x = jnp.pad(x, widths, constant_values=clamp_fill(value, x.dtype))
     return x.reshape(pre + (hs.padded_units,) + post)
 
 

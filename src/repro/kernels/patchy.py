@@ -5,23 +5,25 @@ patchy connectivity caps each post-synaptic hypercolumn at ``nact``
 pre-synaptic HCs (Table 1's nactHi), and the datapath streams only those.
 The dense kernels emulate this by multiplying a mask into a full (Ni, Nj)
 product — burning Hi/nact× excess MXU work.  This module is the faithful
-translation: an ``(Hj, nact)`` *active-pre-HC index table* is derived
-from the HC-level mask, the live pre-blocks are gathered into a compact
-``(Hj, B, K)`` / ``(Hj, K, Mj)`` layout (K = nact·Mi — the aligned
-"burst" the FPGA reads), and the fused kernels run dense aligned tiles
-over the compact layout only.
+translation: the ``(Hj, nact)`` *active-pre-HC index table* (built once
+from the HC-level mask — persistent state on compact projections,
+memoized on mask identity elsewhere; see core/compact.py) names the live
+pre-blocks, which are gathered into a compact ``(Hj, B, K)`` /
+``(Hj, K, Mj)`` layout (K = nact·Mi — the aligned "burst" the FPGA
+reads), and the fused kernels run dense aligned tiles over the compact
+layout only.
 
-Cost model (be precise about what shrinks): **MXU work** and the
-weight/trace **matrix traffic through the kernels** scale with nact/Hi
-instead of 1 — that is the Hi/nact× win the BENCH tracks.  Two costs do
-NOT shrink: the activation gather duplicates x per post-HC (Hj·K vs Ni
-values — a net traffic increase whenever Hj·nact > Hi, cheap relative to
-the matmul savings because it is O(B·Hj·K) vs O(B·Hi·Mi·Nj) MACs), and
-``patchy_update`` scatters its compact results back through the DENSE
-(Ni, Nj) pij state, an O(Ni·Nj) copy per learn step that is the price of
-keeping the trace layout shared with the dense path, checkpoints and
-sharding.  A compact-resident pij layout that eliminates the scatter is
-tracked in ROADMAP ("Patchy-trace exploration").
+Two tiers share the same kernel bodies (DESIGN.md §7):
+
+* ``patchy_forward`` / ``patchy_update`` — DENSE-resident state: operands
+  are gathered from (Ni, Nj) matrices per call and (for the update)
+  scattered back, an O(Ni·Nj) round-trip per learn step that is the price
+  of keeping the trace layout shared with the dense path.
+* ``compact_forward`` / ``compact_update`` — COMPACT-resident state
+  (``ProjSpec.compact``): weights and joint traces live as (Hj, K, Mj)
+  leaves, so the update reads and writes the compact layout in place —
+  zero O(Ni·Nj) work on the hot path.  Only the activation gather
+  (O(B·Hj·K), inherent to patchy streaming) remains.
 
 Both kernels tile a 3-D grid with the post-HC index as the leading
 (unaligned — it never enters a tile) axis; batch/contraction axes are
@@ -33,14 +35,15 @@ drops them.
 
 Correctness contract:
 
-* ``patchy_forward`` is EXACT versus the masked-dense forward for any
+* the forward kernels are EXACT versus the masked-dense forward for any
   exactly-nact mask (masked-out weights are zero, so skipping them
   changes nothing).
-* ``patchy_update`` implements the *patchy-trace* plasticity semantics
-  (ProjSpec.patchy_traces): active-pair joint traces update exactly as
-  the dense EMA; masked-out pairs HOLD their last value (silent synapses
-  remember — the memory-capped hardware model).  The jnp reference of the
-  same semantics lives in core.bcpnn_layer._learn_jnp.
+* ``patchy_update`` implements the *patchy-held* plasticity semantics
+  (silent synapses hold their last pij); ``compact_update`` implements
+  the *compact* semantics (silent synapses are pinned at the independence
+  product — they are simply not stored).  The jnp references live in
+  core.bcpnn_layer._learn_jnp (dense compute of both semantics) and
+  core.compact.learn_compact_jnp.
 """
 from __future__ import annotations
 
@@ -51,54 +54,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.compact import build_table, gather_dense, scatter_dense, unit_indices
 from .padding import pad_axis
 from .tiling import NEG, SUBLANE, lane_multiple, pad_mc, pad_spec
 
-
-def active_pre_hcs(mask: jax.Array, nact: int) -> jax.Array:
-    """(Hi, Hj) exactly-nact HC mask -> (Hj, nact) int32 table of active
-    pre-HC indices per post-HC, ascending (the compact stream order).
-
-    Derived from the mask on every call — cheap (O(Hi·Hj)) and therefore
-    automatically consistent after ``rewire`` swaps receptive fields.
-    """
-    _, idx = jax.lax.top_k(mask.T, nact)  # (Hj, nact) distinct rows
-    return jnp.sort(idx, axis=1).astype(jnp.int32)
-
-
-def unit_gather_indices(table: jax.Array, mi: int, k_pad: int,
-                        sentinel: int) -> jax.Array:
-    """Expand the HC table to unit-level gather indices (Hj, nact*Mi+k_pad).
-    Pad slots carry ``sentinel`` (out of range): gathers fill zeros there
-    and scatters drop them."""
-    hj, nact = table.shape
-    ui = (table[:, :, None] * mi
-          + jnp.arange(mi, dtype=jnp.int32)[None, None, :]).reshape(hj, nact * mi)
-    if k_pad:
-        ui = jnp.concatenate(
-            [ui, jnp.full((hj, k_pad), sentinel, jnp.int32)], axis=1)
-    return ui
+# Back-compat aliases: these helpers started life here; their home is now
+# core/compact.py (the layout is state, not just a kernel detail).
+active_pre_hcs = build_table
+unit_gather_indices = unit_indices
 
 
 def _gather_pre(x: jax.Array, ui: jax.Array, b_pad: int) -> jax.Array:
     """x (B, Ni) -> compact (Hj, B+b_pad, Kp) with zero-filled pads."""
     xg = jnp.take(x, ui, axis=1, mode="fill", fill_value=0.0)  # (B, Hj, Kp)
     return pad_axis(xg, 0, b_pad).transpose(1, 0, 2)
-
-
-def _gather_cols(dense: jax.Array, ui: jax.Array, hj: int, mj: int) -> jax.Array:
-    """dense (Ni, Hj*Mj) -> compact (Hj, Kp, Mj), zero fill for pad rows."""
-    d3 = dense.reshape(dense.shape[0], hj, mj)
-    take = lambda idx, col: jnp.take(col, idx, axis=0, mode="fill",
-                                     fill_value=0.0)
-    return jax.vmap(take, in_axes=(0, 1))(ui, d3)
-
-
-def _scatter_cols(base3: jax.Array, ui: jax.Array, vals: jax.Array) -> jax.Array:
-    """Scatter compact (Hj, Kp, Mj) values back into a (Ni, Hj, Mj) base;
-    sentinel rows drop."""
-    put = lambda col, idx, v: col.at[idx].set(v, mode="drop")
-    return jax.vmap(put, in_axes=(1, 0, 0), out_axes=1)(base3, ui, vals)
 
 
 # ------------------------------------------------------ forward kernel ----
@@ -126,38 +95,10 @@ def _fwd_kernel(xg_ref, wg_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
         o_ref[0] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("nact", "mi", "hj", "mj", "gain", "block_b", "block_k",
-                     "interpret"),
-)
-def patchy_forward(
-    x: jax.Array,      # (B, Ni)
-    w: jax.Array,      # (Ni, Hj*Mj) masked dense weights
-    bias: jax.Array,   # (Hj*Mj,)
-    mask: jax.Array,   # (Hi, Hj) exactly-nact HC mask
-    nact: int,
-    mi: int,
-    hj: int,
-    mj: int,
-    gain: float = 1.0,
-    block_b: int = 128,
-    block_k: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """Fused patchy activation: gather live pre-blocks per post-HC, then
-    support-matmul + per-HC softmax over the compact layout only."""
-    b, ni = x.shape
-    k_units = nact * mi
-    bs = pad_spec(b, block_b, SUBLANE)
-    ks = pad_spec(k_units, block_k, lane_multiple(k_units))
-    mp = pad_mc(mj)
-    table = active_pre_hcs(mask, nact)
-    ui = unit_gather_indices(table, mi, ks.pad, sentinel=ni)
-    xg = _gather_pre(x, ui, bs.pad)                        # (Hj, Bp, Kp)
-    wg = pad_axis(_gather_cols(w, ui, hj, mj), 2, mp - mj)  # (Hj, Kp, Mp)
-    bg = pad_axis(bias.reshape(hj, 1, mj), 2, mp - mj, value=NEG)
-    out = pl.pallas_call(
+def _fwd_call(xg, wg, bg, dtype, bs, ks, hj, mp, gain, interpret):
+    """Shared pallas_call for both forward tiers (operands pre-gathered
+    and padded to (Hj, Bp, Kp) / (Hj, Kp, Mp) / (Hj, 1, Mp))."""
+    return pl.pallas_call(
         functools.partial(_fwd_kernel, k_steps=ks.grid, gain=gain),
         grid=(hj, bs.grid, ks.grid),
         in_specs=[
@@ -166,10 +107,74 @@ def patchy_forward(
             pl.BlockSpec((1, 1, mp), lambda h, i, k: (h, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bs.block, mp), lambda h, i, k: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((hj, bs.padded, mp), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((hj, bs.padded, mp), dtype),
         scratch_shapes=[pltpu.VMEM((bs.block, mp), jnp.float32)],
         interpret=interpret,
     )(xg, wg, bg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mi", "hj", "mj", "gain", "block_b", "block_k",
+                     "interpret"),
+)
+def patchy_forward(
+    x: jax.Array,      # (B, Ni)
+    w: jax.Array,      # (Ni, Hj*Mj) masked dense weights
+    bias: jax.Array,   # (Hj*Mj,)
+    table: jax.Array,  # (Hj, nact) active-pre-HC index table
+    mi: int,
+    hj: int,
+    mj: int,
+    gain: float = 1.0,
+    block_b: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused patchy activation over DENSE-resident weights: gather live
+    pre-blocks per post-HC, then support-matmul + per-HC softmax over the
+    compact layout only."""
+    b, ni = x.shape
+    k_units = table.shape[1] * mi
+    bs = pad_spec(b, block_b, SUBLANE)
+    ks = pad_spec(k_units, block_k, lane_multiple(k_units))
+    mp = pad_mc(mj)
+    ui = unit_indices(table, mi, ks.pad, sentinel=ni)
+    xg = _gather_pre(x, ui, bs.pad)                        # (Hj, Bp, Kp)
+    wg = pad_axis(gather_dense(w, ui, hj, mj), 2, mp - mj)  # (Hj, Kp, Mp)
+    bg = pad_axis(bias.reshape(hj, 1, mj), 2, mp - mj, value=NEG)
+    out = _fwd_call(xg, wg, bg, x.dtype, bs, ks, hj, mp, gain, interpret)
+    return out[:, :b, :mj].transpose(1, 0, 2).reshape(b, hj * mj)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mi", "gain", "block_b", "block_k", "interpret"),
+)
+def compact_forward(
+    x: jax.Array,      # (B, Ni)
+    w_c: jax.Array,    # (Hj, K, Mj) compact-RESIDENT weights
+    bias: jax.Array,   # (Hj*Mj,)
+    table: jax.Array,  # (Hj, nact)
+    mi: int,
+    gain: float = 1.0,
+    block_b: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused patchy activation over compact-resident weights: no per-call
+    weight gather — only the inherent activation gather feeds the same
+    fused matmul+softmax kernel as ``patchy_forward``."""
+    b, ni = x.shape
+    hj, k_units, mj = w_c.shape
+    bs = pad_spec(b, block_b, SUBLANE)
+    ks = pad_spec(k_units, block_k, lane_multiple(k_units))
+    mp = pad_mc(mj)
+    ui = unit_indices(table, mi, ks.pad, sentinel=ni)
+    xg = _gather_pre(x, ui, bs.pad)                        # (Hj, Bp, Kp)
+    wg = pad_axis(pad_axis(w_c, 1, ks.pad), 2, mp - mj)    # (Hj, Kp, Mp)
+    bg = pad_axis(bias.reshape(hj, 1, mj), 2, mp - mj, value=NEG)
+    out = _fwd_call(xg, wg, bg, x.dtype, bs, ks, hj, mp, gain, interpret)
     return out[:, :b, :mj].transpose(1, 0, 2).reshape(b, hj * mj)
 
 
@@ -200,52 +205,16 @@ def _update_kernel(xg_ref, yg_ref, pij_ref, lpi_ref, lpj_ref, alpha_ref,
         w_out_ref[0] = logp - (lpi_ref[0].T + lpj_ref[0])
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("nact", "mi", "hj", "mj", "eps", "block_i", "block_k",
-                     "interpret"),
-)
-def patchy_update(
-    pij: jax.Array,     # (Ni, Hj*Mj) dense joint trace
-    log_pi: jax.Array,  # (Ni,)
-    log_pj: jax.Array,  # (Hj*Mj,)
-    x: jax.Array,       # (B, Ni)
-    y: jax.Array,       # (B, Hj*Mj)
-    mask: jax.Array,    # (Hi, Hj) exactly-nact HC mask
-    alpha: jax.Array,   # scalar effective smoothing
-    nact: int,
-    mi: int,
-    hj: int,
-    mj: int,
-    eps: float = 1e-4,
-    block_i: int = 512,
-    block_k: int = 128,
-    interpret: bool = False,
-):
-    """Patchy-trace plasticity: EMA + weight recompute on the compact
-    active layout only, scattered back to the dense state.  Returns
-    (new_pij, new_w): active entries are the exact dense EMA, inactive
-    pij entries hold their previous value, inactive weights are zero."""
-    b, ni = x.shape
-    k_units = nact * mi
-    ks_b = pad_spec(b, block_k, SUBLANE)
-    is_ = pad_spec(k_units, block_i, lane_multiple(k_units))
-    mp = pad_mc(mj)
-    table = active_pre_hcs(mask, nact)
-    ui = unit_gather_indices(table, mi, is_.pad, sentinel=ni)
-    xg = _gather_pre(x, ui, ks_b.pad)                        # (Hj, Bp, Kp)
-    y3 = y.reshape(b, hj, mj).transpose(1, 0, 2)
-    yg = pad_axis(pad_axis(y3, 2, mp - mj), 1, ks_b.pad)     # (Hj, Bp, Mp)
-    pij_c = pad_axis(_gather_cols(pij, ui, hj, mj), 2, mp - mj)
-    lpi_g = jnp.take(log_pi, ui, axis=0, mode="fill",
-                     fill_value=0.0)[:, None, :]             # (Hj, 1, Kp)
-    lpj_c = pad_axis(log_pj.reshape(hj, 1, mj), 2, mp - mj)
-    new_c, w_c = pl.pallas_call(
-        functools.partial(_update_kernel, k_steps=ks_b.grid, batch=b, eps=eps),
-        grid=(hj, is_.grid, ks_b.grid),
+def _update_call(xg, yg, pij_c, lpi_g, lpj_c, alpha, b, bs, is_, hj, mp, eps,
+                 interpret):
+    """Shared pallas_call for both update tiers: compact co-activation
+    matmul + EMA + log-weight fold, all on (Hj, Kp, Mp) tiles."""
+    return pl.pallas_call(
+        functools.partial(_update_kernel, k_steps=bs.grid, batch=b, eps=eps),
+        grid=(hj, is_.grid, bs.grid),
         in_specs=[
-            pl.BlockSpec((1, ks_b.block, is_.block), lambda h, i, k: (h, k, i)),
-            pl.BlockSpec((1, ks_b.block, mp), lambda h, i, k: (h, k, 0)),
+            pl.BlockSpec((1, bs.block, is_.block), lambda h, i, k: (h, k, i)),
+            pl.BlockSpec((1, bs.block, mp), lambda h, i, k: (h, k, 0)),
             pl.BlockSpec((1, is_.block, mp), lambda h, i, k: (h, i, 0)),
             pl.BlockSpec((1, 1, is_.block), lambda h, i, k: (h, 0, i)),
             pl.BlockSpec((1, 1, mp), lambda h, i, k: (h, 0, 0)),
@@ -262,8 +231,92 @@ def patchy_update(
         scratch_shapes=[pltpu.VMEM((is_.block, mp), jnp.float32)],
         interpret=interpret,
     )(xg, yg, pij_c, lpi_g, lpj_c, alpha.reshape(1, 1).astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mi", "hj", "mj", "eps", "block_i", "block_k",
+                     "interpret"),
+)
+def patchy_update(
+    pij: jax.Array,     # (Ni, Hj*Mj) dense joint trace
+    log_pi: jax.Array,  # (Ni,)
+    log_pj: jax.Array,  # (Hj*Mj,)
+    x: jax.Array,       # (B, Ni)
+    y: jax.Array,       # (B, Hj*Mj)
+    table: jax.Array,   # (Hj, nact) active-pre-HC index table
+    alpha: jax.Array,   # scalar effective smoothing
+    mi: int,
+    hj: int,
+    mj: int,
+    eps: float = 1e-4,
+    block_i: int = 512,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Patchy-held plasticity on DENSE-resident traces: EMA + weight
+    recompute on the compact active layout, gathered from and scattered
+    back to the (Ni, Nj) state (the O(Ni·Nj) round-trip ``compact_update``
+    eliminates).  Returns (new_pij, new_w): active entries are the exact
+    dense EMA, inactive pij entries hold their previous value, inactive
+    weights are zero."""
+    b, ni = x.shape
+    k_units = table.shape[1] * mi
+    ks_b = pad_spec(b, block_k, SUBLANE)
+    is_ = pad_spec(k_units, block_i, lane_multiple(k_units))
+    mp = pad_mc(mj)
+    ui = unit_indices(table, mi, is_.pad, sentinel=ni)
+    xg = _gather_pre(x, ui, ks_b.pad)                        # (Hj, Bp, Kp)
+    y3 = y.reshape(b, hj, mj).transpose(1, 0, 2)
+    yg = pad_axis(pad_axis(y3, 2, mp - mj), 1, ks_b.pad)     # (Hj, Bp, Mp)
+    pij_c = pad_axis(gather_dense(pij, ui, hj, mj), 2, mp - mj)
+    lpi_g = jnp.take(log_pi, ui, axis=0, mode="fill",
+                     fill_value=0.0)[:, None, :]             # (Hj, 1, Kp)
+    lpj_c = pad_axis(log_pj.reshape(hj, 1, mj), 2, mp - mj)
+    new_c, w_c = _update_call(xg, yg, pij_c, lpi_g, lpj_c, alpha, b, ks_b,
+                              is_, hj, mp, eps, interpret)
     pij3 = pij.reshape(ni, hj, mj)
-    new_pij = _scatter_cols(pij3, ui, new_c[:, :, :mj]).reshape(ni, hj * mj)
-    w = _scatter_cols(jnp.zeros_like(pij3), ui,
+    new_pij = scatter_dense(pij3, ui, new_c[:, :, :mj]).reshape(ni, hj * mj)
+    w = scatter_dense(jnp.zeros_like(pij3), ui,
                       w_c[:, :, :mj]).reshape(ni, hj * mj)
     return new_pij, w
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mi", "eps", "block_i", "block_k", "interpret"),
+)
+def compact_update(
+    pij_c: jax.Array,   # (Hj, K, Mj) compact-RESIDENT joint trace
+    log_pi: jax.Array,  # (Ni,)
+    log_pj: jax.Array,  # (Hj*Mj,)
+    x: jax.Array,       # (B, Ni)
+    y: jax.Array,       # (B, Hj*Mj)
+    table: jax.Array,   # (Hj, nact)
+    alpha: jax.Array,   # scalar effective smoothing
+    mi: int,
+    eps: float = 1e-4,
+    block_i: int = 512,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Scatter-free compact plasticity: the EMA reads the resident
+    (Hj, K, Mj) trace and the kernel writes the new trace and folded
+    weights in the same layout — no (Ni, Nj) array exists anywhere in
+    this call.  Returns (new_pij_c, new_w_c), both (Hj, K, Mj)."""
+    b, ni = x.shape
+    hj, k_units, mj = pij_c.shape
+    ks_b = pad_spec(b, block_k, SUBLANE)
+    is_ = pad_spec(k_units, block_i, lane_multiple(k_units))
+    mp = pad_mc(mj)
+    ui = unit_indices(table, mi, is_.pad, sentinel=ni)
+    xg = _gather_pre(x, ui, ks_b.pad)                        # (Hj, Bp, Kp)
+    y3 = y.reshape(b, hj, mj).transpose(1, 0, 2)
+    yg = pad_axis(pad_axis(y3, 2, mp - mj), 1, ks_b.pad)     # (Hj, Bp, Mp)
+    pij_p = pad_axis(pad_axis(pij_c, 1, is_.pad), 2, mp - mj)
+    lpi_g = jnp.take(log_pi, ui, axis=0, mode="fill",
+                     fill_value=0.0)[:, None, :]             # (Hj, 1, Kp)
+    lpj_c = pad_axis(log_pj.reshape(hj, 1, mj), 2, mp - mj)
+    new_c, w_c = _update_call(xg, yg, pij_p, lpi_g, lpj_c, alpha, b, ks_b,
+                              is_, hj, mp, eps, interpret)
+    return new_c[:, :k_units, :mj], w_c[:, :k_units, :mj]

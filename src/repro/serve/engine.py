@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.bcpnn_layer import validate_patchy_mask
+from ..core.bcpnn_layer import validate_patchy_state
 from ..core.network import as_spec, infer, supervised_readout_step
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .metrics import ServeMetrics
@@ -59,14 +59,17 @@ class BCPNNService:
                  poll_ms: float = 20.0, result_retention: int = 4096):
         self.spec = as_spec(spec_or_cfg)
         self.state = state
-        # Deployment boundary for arbitrary (possibly pre-exactly-nact-fix)
-        # checkpoints: the compact patchy infer path assumes the
-        # exactly-nact mask invariant, so verify it on the concrete state
-        # before any request is served.
+        # Deployment boundary for arbitrary (possibly pre-exactly-nact-fix
+        # or hand-migrated) checkpoints: the patchy infer path assumes the
+        # exactly-nact mask invariant, and compact-resident projections
+        # additionally assume their index-table leaf agrees with the mask
+        # — verify both on the concrete state before any request is
+        # served (a drifted table would route the WRONG synapses
+        # silently).
         for l, (proj, pspec) in enumerate(zip(state.projs, self.spec.projs)):
-            validate_patchy_mask(proj.mask, pspec, where=f"stack proj {l}")
-        validate_patchy_mask(state.readout.mask, self.spec.readout,
-                             where="readout")
+            validate_patchy_state(proj, pspec, where=f"stack proj {l}")
+        validate_patchy_state(state.readout, self.spec.readout,
+                              where="readout")
         self.online_learning = online_learning
         self.feedback_batch = feedback_batch
         self._poll_s = poll_ms * 1e-3

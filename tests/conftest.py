@@ -1,5 +1,13 @@
 import os
 
-# Tests run on the single real CPU device; only launch/dryrun.py sets the
-# 512-device flag (and only in its own process).
+# Tests run on the CPU platform; only launch/dryrun.py sets the 512-device
+# flag (and only in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# A 2-device host-CPU mesh for the data-parallel shard_map tests
+# (tests/test_distributed.py): the flag must be set before jax initializes.
+# Single-device tests are unaffected — everything still places on device 0.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()

@@ -1,0 +1,303 @@
+"""Compact-resident patchy state (ProjSpec.compact): scatter-free learn
+parity against the dense-compute reference, structural no-dense-leaf
+guarantees, index-table persistence/memoization, checkpoint migration
+round-trip, and serving integration."""
+import dataclasses
+import importlib.util
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compact as compact_mod
+from repro.core.bcpnn_layer import (
+    ProjSpec,
+    _learn_jnp,
+    forward,
+    init_projection,
+    learn,
+    rewire,
+    validate_patchy_state,
+)
+from repro.core.compact import densify_pij
+from repro.core.hypercolumns import LayerGeom
+
+COMPACT = ProjSpec(LayerGeom(13, 2), LayerGeom(5, 10), alpha=0.2, nact=4,
+                   backend="jnp", patchy_traces=True, compact=True)
+
+
+def _steps(spec, n, seed=1, b=19):
+    for k in jax.random.split(jax.random.PRNGKey(seed), n):
+        kx, ky = jax.random.split(k)
+        yield (jax.random.uniform(kx, (b, spec.pre.N)),
+               jax.random.uniform(ky, (b, spec.post.N)))
+
+
+def _dense_view(proj, spec):
+    return np.asarray(densify_pij(proj.traces.pij, proj.traces.pi,
+                                  proj.traces.pj, proj.table, spec.pre.M))
+
+
+# ----------------------------------------------------- spec validation ----
+
+def test_compact_spec_requires_patchy_budget():
+    with pytest.raises(ValueError, match="compact"):
+        ProjSpec(LayerGeom(8, 2), LayerGeom(4, 8), compact=True)
+    with pytest.raises(ValueError, match="compact"):
+        ProjSpec(LayerGeom(8, 2), LayerGeom(4, 8), nact=3, compact=True)
+
+
+# ------------------------------------------------ structural guarantees ----
+
+def test_compact_state_carries_no_dense_leaf():
+    """The acceptance invariant: a compact projection's pytree has NO
+    (Ni, Nj)-shaped leaf — pij and w are (Hj, K, Mj), plus the (Hj, nact)
+    table; nothing on the learn path can touch dense storage."""
+    proj = init_projection(COMPACT, jax.random.PRNGKey(0))
+    ni, nj = COMPACT.pre.N, COMPACT.post.N
+    k = COMPACT.nact * COMPACT.pre.M
+    want = (COMPACT.post.H, k, COMPACT.post.M)
+    assert proj.traces.pij.shape == want
+    assert proj.w.shape == want
+    assert proj.table.shape == (COMPACT.post.H, COMPACT.nact)
+    for leaf in jax.tree.leaves(proj):
+        assert tuple(leaf.shape) != (ni, nj), \
+            f"dense (Ni, Nj) leaf leaked into compact state: {leaf.shape}"
+    # ... and learning preserves the invariant
+    x, y = next(_steps(COMPACT, 1))
+    for spec in (COMPACT, COMPACT.with_backend("pallas")):
+        out = learn(proj, spec, x, y)
+        for leaf in jax.tree.leaves(out):
+            assert tuple(leaf.shape) != (ni, nj)
+
+
+# ------------------------------------- learn: parity with the reference ----
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_compact_learn_matches_dense_reference_including_rewire(backend):
+    """Scatter-free compact learn vs the dense-compute reference of the
+    same semantics (_learn_jnp on a dense-layout state with a compact
+    spec) — through 8 chained steps with a rewire in the middle.  The
+    independence-product definition of silent synapses makes the rewire
+    MI ranking identical on both sides, so masks and tables stay in
+    lockstep across the event."""
+    spec = dataclasses.replace(COMPACT, backend=backend)
+    ref_init = dataclasses.replace(COMPACT, compact=False)
+    proj_ref = init_projection(ref_init, jax.random.PRNGKey(0))
+    proj_c = init_projection(COMPACT, jax.random.PRNGKey(0))
+    proj_c = jax.tree.map(jnp.array, proj_c)
+    for i, (x, y) in enumerate(_steps(COMPACT, 8)):
+        proj_ref = _learn_jnp(proj_ref, COMPACT, x, y)
+        proj_c = learn(proj_c, spec, x, y)
+        np.testing.assert_allclose(_dense_view(proj_c, spec),
+                                   np.asarray(proj_ref.traces.pij),
+                                   atol=1e-6, err_msg=f"pij at step {i}")
+        np.testing.assert_allclose(np.asarray(proj_c.b),
+                                   np.asarray(proj_ref.b), atol=1e-6)
+        if i == 3:
+            proj_ref = rewire(proj_ref, COMPACT)
+            proj_c = rewire(proj_c, spec)
+            np.testing.assert_array_equal(np.asarray(proj_ref.mask),
+                                          np.asarray(proj_c.mask))
+            assert np.all(np.asarray(proj_c.mask).sum(0) == COMPACT.nact)
+        xf = jax.random.uniform(jax.random.PRNGKey(100 + i),
+                                (7, spec.pre.N))
+        np.testing.assert_allclose(
+            np.asarray(forward(proj_c, spec, xf)),
+            np.asarray(forward(proj_ref, ref_init.with_backend("jnp"), xf)),
+            atol=1e-5, err_msg=f"forward at step {i}")
+
+
+def test_compact_active_entries_match_dense_patchy_schedule():
+    """While the mask is static, active joint-trace entries follow the
+    same EMA recursion as the dense-resident patchy path, so weights and
+    forward outputs agree; only silent entries differ (held vs
+    independence)."""
+    spec_held = dataclasses.replace(COMPACT, compact=False,
+                                    backend="pallas")
+    spec_c = COMPACT.with_backend("pallas")
+    proj_h = init_projection(spec_held, jax.random.PRNGKey(0))
+    proj_c = init_projection(COMPACT, jax.random.PRNGKey(0))
+    for x, y in _steps(COMPACT, 5):
+        proj_h = learn(proj_h, spec_held, x, y)
+        proj_c = learn(proj_c, spec_c, x, y)
+    from repro.core.compact import gather_dense, unit_indices
+    ui = unit_indices(proj_c.table, COMPACT.pre.M, sentinel=COMPACT.pre.N)
+    held_active = gather_dense(proj_h.traces.pij, ui, COMPACT.post.H,
+                               COMPACT.post.M)
+    np.testing.assert_allclose(np.asarray(proj_c.traces.pij),
+                               np.asarray(held_active), atol=1e-6)
+    x = jax.random.uniform(jax.random.PRNGKey(9), (11, COMPACT.pre.N))
+    np.testing.assert_allclose(np.asarray(forward(proj_c, spec_c, x)),
+                               np.asarray(forward(proj_h, spec_held, x)),
+                               atol=1e-5)
+
+
+# ------------------------------------------- index-table persistence ----
+
+def test_table_not_rebuilt_between_consecutive_learn_steps(monkeypatch):
+    """Regression for the per-call top_k: on compact state the (Hj, nact)
+    table is a state leaf, so consecutive learn/forward steps must not
+    invoke the table builder at all."""
+    proj = init_projection(COMPACT, jax.random.PRNGKey(0))
+    calls = []
+    real = compact_mod.build_table
+
+    def spy(mask, nact):
+        calls.append(1)
+        return real(mask, nact)
+
+    monkeypatch.setattr(compact_mod, "build_table", spy)
+    (x1, y1), (x2, y2) = list(_steps(COMPACT, 2))
+    for spec in (COMPACT, COMPACT.with_backend("pallas")):
+        p = learn(proj, spec, x1, y1)
+        p = learn(p, spec, x2, y2)
+        forward(p, spec, x1)
+    assert calls == [], f"table rebuilt {len(calls)}x on the compact hot path"
+
+
+def test_dense_resident_table_memoized_on_mask_identity(monkeypatch):
+    """The dense-resident patchy path derives its table from the mask —
+    memoized on the mask's identity, so repeated eager kernel calls on
+    the same state do one top_k, and a rewired (new) mask invalidates."""
+    from repro.kernels import fused_forward
+
+    spec = dataclasses.replace(COMPACT, compact=False, backend="pallas")
+    proj = init_projection(spec, jax.random.PRNGKey(0))
+    calls = []
+    real = compact_mod.build_table
+
+    def spy(mask, nact):
+        calls.append(1)
+        return real(mask, nact)
+
+    monkeypatch.setattr(compact_mod, "build_table", spy)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (9, spec.pre.N))
+    fused_forward(proj, spec, x)
+    n_first = len(calls)
+    assert n_first >= 1
+    fused_forward(proj, spec, x)
+    fused_forward(proj, spec, x)
+    assert len(calls) == n_first, "same mask object was re-derived"
+    proj2 = dataclasses.replace(proj, mask=jnp.array(proj.mask))
+    fused_forward(proj2, spec, x)
+    assert len(calls) > n_first, "new mask object must invalidate the memo"
+
+
+# ----------------------------------------------- checkpoint migration ----
+
+def _load_migrate():
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                        "migrate_ckpt.py")
+    mod_spec = importlib.util.spec_from_file_location("migrate_ckpt", path)
+    mod = importlib.util.module_from_spec(mod_spec)
+    mod_spec.loader.exec_module(mod)
+    return mod
+
+
+def test_migrate_ckpt_roundtrip_bit_identical_inference(tmp_path):
+    """Dense checkpoint -> migrate CLI -> compact checkpoint: the migrated
+    manifest restores on its own spec and serves bit-identical inference
+    (the forward kernels see the same gathered operands either way)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.network import (init_deep, infer, make_network_spec,
+                                    spec_from_dict)
+    from repro.core.trainer import Trainer
+
+    spec = make_network_spec(LayerGeom(16, 2), [(4, 8)], n_classes=3,
+                             alpha=1e-2, nact=[5], backend="pallas",
+                             patchy_traces=True)
+    tr = Trainer(spec, seed=0)
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (64, 32)))
+    y = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 3))
+    tr.fit(x, y, epochs=1, batch=16)
+    src = str(tmp_path / "dense")
+    dst = str(tmp_path / "compact")
+    tr.save(src)
+
+    migrate = _load_migrate()
+    assert migrate.main(["--ckpt", src, "--out", dst]) == 0
+
+    mgr = CheckpointManager(dst)
+    step = mgr.latest_step()
+    new_spec = spec_from_dict(mgr.read_extra(step)["spec"])
+    assert new_spec.projs[0].compact
+    state = mgr.restore(step, init_deep(new_spec, jax.random.PRNGKey(0)))
+    validate_patchy_state(state.projs[0], new_spec.projs[0])
+    assert state.projs[0].traces.pij.ndim == 3
+
+    xe = jnp.asarray(x[:32])
+    probs_d, pred_d = infer(tr.state, spec, xe)
+    probs_c, pred_c = infer(state, new_spec, xe)
+    np.testing.assert_array_equal(np.asarray(probs_c), np.asarray(probs_d))
+    np.testing.assert_array_equal(np.asarray(pred_c), np.asarray(pred_d))
+
+    # restoring the migrated manifest into a DENSE target fails loudly
+    # with the layout-mismatch hint, not a generic structure error
+    with pytest.raises(ValueError, match="migrate_ckpt"):
+        mgr.restore(step, init_deep(spec, jax.random.PRNGKey(0)))
+
+
+def test_migrate_ckpt_refuses_non_patchy_checkpoint(tmp_path):
+    from repro.core.network import make_network_spec
+    from repro.core.trainer import Trainer
+
+    spec = make_network_spec(LayerGeom(8, 2), [(2, 4)], n_classes=2)
+    tr = Trainer(spec, seed=0)
+    src = str(tmp_path / "dense")
+    tr.save(src)
+    migrate = _load_migrate()
+    assert migrate.main(["--ckpt", src, "--out",
+                         str(tmp_path / "out")]) == 2
+
+
+# ----------------------------------------------- serving integration ----
+
+def test_serving_engine_compact_infer_and_online_learning():
+    """A compact-resident network serves through BCPNNService — the
+    bucketed infer path dispatches to the scatter-free kernels and
+    matches the jnp reference network — and online learning folds
+    feedback into the readout with the compact stack frozen."""
+    from repro.core.network import infer as net_infer
+    from repro.core.network import init_deep, make_network_spec
+    from repro.serve import BCPNNService
+
+    spec = make_network_spec(LayerGeom(16, 2), [(4, 8)], n_classes=3,
+                             alpha=1e-2, nact=[5], backend="pallas",
+                             patchy_traces=True, compact=True)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    xs = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (12, 32)))
+    want = np.asarray(net_infer(state, spec.with_backend("jnp"),
+                                jnp.asarray(xs))[1])
+    svc = BCPNNService(state, spec, max_batch=8, max_wait_ms=2.0,
+                      online_learning=True, feedback_batch=4).start()
+    try:
+        ids = [svc.submit(x) for x in xs]
+        got = np.asarray([svc.result(i).pred for i in ids])
+        for x in xs[:6]:
+            svc.feedback(x, 1)
+    finally:
+        svc.stop()
+    np.testing.assert_array_equal(got, want)
+    assert svc.metrics.snapshot()["learn_samples"] >= 6
+    assert svc.state.projs[0].traces.pij.ndim == 3  # stack stayed compact
+
+
+def test_serving_engine_rejects_drifted_table():
+    """A compact state whose index table disagrees with its mask must be
+    refused at the deployment boundary."""
+    from repro.core.network import init_deep, make_network_spec
+    from repro.serve import BCPNNService
+
+    spec = make_network_spec(LayerGeom(10, 2), [(4, 8)], n_classes=3,
+                             nact=[3], backend="pallas",
+                             patchy_traces=True, compact=True)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    bad_table = jnp.roll(state.projs[0].table, 1, axis=0)
+    bad = dataclasses.replace(
+        state,
+        projs=(dataclasses.replace(state.projs[0], table=bad_table),))
+    with pytest.raises(ValueError, match="disagrees with the mask"):
+        BCPNNService(bad, spec, max_batch=8)

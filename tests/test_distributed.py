@@ -1,0 +1,139 @@
+"""Data-parallel shard_map train steps: the trace all-reduce must be
+EXACT — the multi-device step reproduces the single-device streaming step
+bit-for-bit (np.array_equal on every state leaf, no tolerance), for
+dense, patchy-held and compact-resident projections.  The decomposition
+that makes this possible (full-batch contraction on disjoint post-column
+shards, so the psum adds one real partial and zeros per element) is
+documented in distributed/data_parallel.py.  Both sides run under jit
+(the trainer always jits the step); the canonical step pins its stat and
+noise seams with optimization_barrier so the two programs compile the
+identical per-element arithmetic.  Runs on the 2-device host CPU mesh set
+up by conftest.py."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hypercolumns import LayerGeom
+from repro.core.network import (
+    init_deep,
+    make_network_spec,
+    supervised_readout_step,
+    unsupervised_layer_step,
+)
+from repro.distributed import (
+    make_data_parallel_supervised_step,
+    make_data_parallel_unsupervised_step,
+)
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs the 2-device CPU mesh (conftest "
+    "sets --xla_force_host_platform_device_count=2)")
+
+
+def _mesh():
+    return jax.make_mesh((2,), ("data",))
+
+
+_single_unsup = jax.jit(functools.partial(unsupervised_layer_step, layer=0),
+                        static_argnames=("spec",))
+_single_sup = jax.jit(supervised_readout_step, static_argnames=("spec",))
+
+
+def _spec(kind: str, struct_every: int = 0):
+    """Depth-1 network with Hj divisible by the 2-way data axis."""
+    kwargs = dict(alpha=1e-2, backend="jnp", support_noise=2.0,
+                  noise_steps=50, struct_every=struct_every)
+    if kind == "dense":
+        return make_network_spec(LayerGeom(12, 2), [(6, 8)], n_classes=3,
+                                 **kwargs)
+    if kind == "patchy":
+        return make_network_spec(LayerGeom(12, 2), [(6, 8)], n_classes=3,
+                                 nact=[4], patchy_traces=True, **kwargs)
+    assert kind == "compact"
+    return make_network_spec(LayerGeom(12, 2), [(6, 8)], n_classes=3,
+                             nact=[4], patchy_traces=True, compact=True,
+                             **kwargs)
+
+
+def _assert_states_equal(got, want, context=""):
+    flat_g, _ = jax.tree_util.tree_flatten_with_path(got)
+    flat_w, _ = jax.tree_util.tree_flatten_with_path(want)
+    assert len(flat_g) == len(flat_w)
+    for (path, g), (_, w) in zip(flat_g, flat_w):
+        name = jax.tree_util.keystr(path)
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (
+            f"{context}: leaf {name} diverged (max abs diff "
+            f"{np.max(np.abs(np.asarray(g, np.float64) - np.asarray(w, np.float64)))})")
+
+
+@pytest.mark.parametrize("kind", ["dense", "patchy", "compact"])
+def test_dp_unsupervised_matches_single_device_bitwise(kind):
+    spec = _spec(kind)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    dp_step = make_data_parallel_unsupervised_step(spec, _mesh(), layer=0)
+    state_dp = jax.tree.map(jnp.array, state)
+    for i, k in enumerate(jax.random.split(jax.random.PRNGKey(1), 4)):
+        x = jax.random.uniform(k, (16, spec.input_geom.N))
+        state = _single_unsup(state, spec, x)
+        state_dp = dp_step(state_dp, x)
+        _assert_states_equal(state_dp, state, context=f"{kind} step {i}")
+
+
+@pytest.mark.parametrize("kind", ["patchy", "compact"])
+def test_dp_step_exact_across_rewire(kind):
+    """The struct_every cold path (rewire under lax.cond) replicates
+    inside the shard_map step: masks, tables and re-gathered traces stay
+    bit-identical through a rewire event."""
+    spec = _spec(kind, struct_every=2)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    dp_step = make_data_parallel_unsupervised_step(spec, _mesh(), layer=0)
+    state_dp = jax.tree.map(jnp.array, state)
+    for i, k in enumerate(jax.random.split(jax.random.PRNGKey(2), 5)):
+        x = jax.random.uniform(k, (16, spec.input_geom.N))
+        state = _single_unsup(state, spec, x)
+        state_dp = dp_step(state_dp, x)
+        _assert_states_equal(state_dp, state, context=f"{kind} step {i}")
+    assert int(state.projs[0].traces.t) >= 4  # crossed ≥2 rewire events
+
+
+@pytest.mark.parametrize("kind", ["dense", "compact"])
+def test_dp_supervised_matches_single_device_bitwise(kind):
+    spec = _spec(kind)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    dp_step = make_data_parallel_supervised_step(spec, _mesh())
+    state_dp = jax.tree.map(jnp.array, state)
+    for i, k in enumerate(jax.random.split(jax.random.PRNGKey(3), 3)):
+        kx, ky = jax.random.split(k)
+        x = jax.random.uniform(kx, (16, spec.input_geom.N))
+        labels = jax.random.randint(ky, (16,), 0, spec.n_classes)
+        state = _single_sup(state, spec, x, labels)
+        state_dp = dp_step(state_dp, x, labels)
+        _assert_states_equal(state_dp, state, context=f"{kind} sup step {i}")
+
+
+def test_dp_step_rejects_unshardable_geometry():
+    spec = make_network_spec(LayerGeom(12, 2), [(5, 8)], n_classes=3,
+                             backend="jnp")  # 5 post-HCs on a 2-way axis
+    with pytest.raises(ValueError, match="not divisible"):
+        make_data_parallel_unsupervised_step(spec, _mesh(), layer=0)
+
+
+def test_compact_projection_shardings_use_hj_axis():
+    """Compact (Hj, K, Mj) leaves and the integer index table shard along
+    the post-HC axis; dense 2-D leaves keep the proj_pre rule."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import make_rules, projection_shardings
+    from repro.distributed.sharding import sharding_context
+
+    spec = _spec("compact")
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    with sharding_context(mesh, make_rules(mesh)):
+        sh = projection_shardings(state)
+    assert sh.projs[0].traces.pij.spec == P("model", None, None)
+    assert sh.projs[0].w.spec == P("model", None, None)
+    assert sh.projs[0].table.spec == P("model", None)
+    assert sh.readout.w.spec == P("model", None)  # dense: proj_pre rule

@@ -176,6 +176,48 @@ def test_no_misalignment_warnings_at_model1_scale():
     assert out.shape == (b, hj * mj)
 
 
+# ------------------------------------------------- low-precision pads ----
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_pad_fill_clamped_to_dtype_range(dtype):
+    """The softmax pad sentinel must stay FINITE after casting into the
+    operand dtype (bf16 cast-on-fold serving, ROADMAP §bf16): an -inf
+    fill makes an all-pad HC compute -inf - (-inf) = NaN.  clamp_fill
+    pins it at finfo(dtype).min."""
+    from repro.kernels.padding import clamp_fill, pad_axis, pad_hc_axis
+    from repro.kernels.tiling import NEG, pad_hc_spec
+
+    fill = clamp_fill(NEG, dtype)
+    # In range (no -inf on cast: bf16 holds -1e30 as-is, f16 clamps to
+    # its finfo.min) but still negative enough that exp underflows to 0.
+    assert np.isfinite(fill) and fill >= float(jnp.finfo(dtype).min)
+    assert np.asarray(jnp.asarray(fill, dtype), np.float32) < -1e4
+    assert np.isfinite(np.asarray(jnp.asarray(fill, dtype), np.float32))
+    padded = pad_axis(jnp.zeros((2, 3), dtype), 1, 5, value=NEG)
+    assert np.isfinite(np.asarray(padded, np.float32)).all()
+    hs = pad_hc_spec(3, 10, 512)  # mc pads 10 -> 16 with NEG lanes
+    hc_padded = pad_hc_axis(jnp.zeros((4, 30), dtype), 1, hs, value=NEG)
+    assert np.isfinite(np.asarray(hc_padded, np.float32)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_hc_softmax_low_precision_pad_semantics(dtype):
+    """Padded softmax lanes stay inert — zero probability, no NaN even
+    through all-pad HCs — for the narrow serving dtypes, on a hostile
+    geometry (odd minicolumn count -> NEG-filled lanes, prime batch ->
+    pad rows)."""
+    b, h, m = 13, 7, 10
+    s = (jax.random.normal(jax.random.PRNGKey(3), (b, h * m)) * 4).astype(dtype)
+    got = hc_softmax(s, h, m)
+    assert got.dtype == dtype
+    got32 = np.asarray(got, np.float32)
+    assert np.isfinite(got32).all(), "pad lanes leaked NaN/inf"
+    np.testing.assert_allclose(got32.reshape(b, h, m).sum(-1), 1.0,
+                               atol=2e-2)
+    want = np.asarray(ref_hc_softmax(s, h, m), np.float32)
+    np.testing.assert_allclose(got32, want, atol=2e-2)
+
+
 # ------------------------------------------------------- autotune cache --
 
 def test_tuned_blocks_consulted(tmp_path, monkeypatch):

@@ -124,6 +124,61 @@ def test_topk_mask_exact_budget(hi, hj, k, quant, seed):
     assert set(np.unique(m)) <= {0.0, 1.0}
 
 
+@pytest.mark.slow
+@settings(deadline=None, max_examples=10)
+@given(hi=st.integers(5, 12), mi=st.integers(1, 3), hj=st.integers(2, 5),
+       mj=st.integers(2, 10), nact=st.integers(1, 4), b=st.integers(2, 17),
+       backend=st.sampled_from(["jnp", "pallas"]), seed=st.integers(0, 50))
+def test_compact_learn_matches_dense_reference_property(hi, mi, hj, mj,
+                                                        nact, b, backend,
+                                                        seed):
+    """Scatter-free compact learn == the dense-trace ``_learn_jnp``
+    reference of the compact semantics, for ANY geometry/batch/backend:
+    7 chained steps with alpha=0.3 cross the bias-correction crossover
+    (t > 1/alpha ≈ 3.3) and a rewire event fires mid-run — masks, the
+    densified joint trace, biases and forward outputs must all track the
+    reference through it."""
+    import dataclasses
+
+    from repro.core.bcpnn_layer import (ProjSpec, _learn_jnp, forward,
+                                        init_projection, learn, rewire)
+    from repro.core.compact import densify_pij
+
+    nact = min(nact, hi - 1)
+    spec = ProjSpec(LayerGeom(hi, mi), LayerGeom(hj, mj), alpha=0.3,
+                    nact=nact, backend=backend, patchy_traces=True,
+                    compact=True)
+    key = jax.random.PRNGKey(seed)
+    proj_ref = init_projection(dataclasses.replace(spec, compact=False),
+                               key)
+    proj_c = init_projection(spec, key)
+    for i, k in enumerate(jax.random.split(jax.random.PRNGKey(seed + 1), 7)):
+        kx, ky = jax.random.split(k)
+        x = jax.random.uniform(kx, (b, spec.pre.N))
+        y = jax.random.uniform(ky, (b, spec.post.N))
+        proj_ref = _learn_jnp(proj_ref, spec, x, y)
+        proj_c = learn(proj_c, spec, x, y)
+        dense_view = densify_pij(proj_c.traces.pij, proj_c.traces.pi,
+                                 proj_c.traces.pj, proj_c.table, mi)
+        np.testing.assert_allclose(np.asarray(dense_view),
+                                   np.asarray(proj_ref.traces.pij),
+                                   atol=1e-6, err_msg=f"pij step {i}")
+        np.testing.assert_allclose(np.asarray(proj_c.b),
+                                   np.asarray(proj_ref.b), atol=1e-6)
+        if i == 3:  # at the crossover: a rewire event
+            proj_ref = rewire(proj_ref, spec)
+            proj_c = rewire(proj_c, spec)
+            np.testing.assert_array_equal(np.asarray(proj_ref.mask),
+                                          np.asarray(proj_c.mask))
+            assert np.all(np.asarray(proj_c.mask).sum(0) == nact)
+    assert float(proj_c.traces.t) * spec.alpha > 1.0, "never crossed"
+    xf = jax.random.uniform(jax.random.PRNGKey(seed + 2), (5, spec.pre.N))
+    np.testing.assert_allclose(
+        np.asarray(forward(proj_c, spec, xf)),
+        np.asarray(forward(proj_ref, dataclasses.replace(
+            spec, compact=False, backend="jnp"), xf)), atol=1e-5)
+
+
 @settings(**COMMON)
 @given(seed=st.integers(0, 100))
 def test_grad_compression_error_feedback_bounded(seed):
