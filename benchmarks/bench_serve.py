@@ -1,15 +1,22 @@
 """Serving benchmark: offered-load sweep through the microbatched engine.
 
-For each backend (jnp reference, fused Pallas dispatch) and each offered
-arrival rate, drives the open-loop generator through ``BCPNNService`` and
-records achieved images/s, p50/p99 latency and batch occupancy — the
-serving-side perf trajectory (the training side records via
-bench_stream_vs_seq).  A very high offered rate measures capacity (the
-admission queue saturates and microbatches run back-to-back at the
-largest bucket); a moderate rate measures latency at sustainable load.
+Two sections:
+
+* **Single-model backend sweep** — for each backend (jnp reference,
+  fused Pallas dispatch) and each offered arrival rate, drives the
+  open-loop generator through ``BCPNNService`` and records achieved
+  images/s, p50/p99 latency and batch occupancy.  A very high offered
+  rate measures capacity (the admission queue saturates and microbatches
+  run back-to-back at the largest bucket); a moderate rate measures
+  latency at sustainable load.
+* **Multi-model fairness sweep** — two checkpointed models behind ONE
+  admission front under a 10:1 skewed Poisson mix, recording per-model
+  images/s + p50/p99 and the minority completion share — the fairness
+  surface the round-robin scheduler is designed for.
 
 Output: ``name,value,unit`` CSV rows, one machine-readable
-``bench_serve_json={...}`` line, and an optional ``--json PATH`` dump.
+``bench_serve_json={...}`` line, and a JSON dump (default
+``BENCH_serve.json``; the committed snapshot is refreshed from CI runs).
 """
 from __future__ import annotations
 
@@ -17,12 +24,14 @@ import argparse
 import json
 
 import jax
-import numpy as np
 
 from repro.configs.bcpnn_models import deep_synth_spec
 from repro.core import Trainer
 from repro.data.synthetic import encode_images, make_synthetic
-from repro.serve import BCPNNService, ServeMetrics, run_open_loop
+from repro.serve import (
+    BCPNNService, ServeMetrics, StreamSpec, run_multi_open_loop,
+    run_open_loop,
+)
 
 
 def bench_backend(backend: str, rates, depth: int = 2, side: int = 8,
@@ -70,12 +79,76 @@ def bench_backend(backend: str, rates, depth: int = 2, side: int = 8,
     return rows
 
 
-def run(csv=True, json_path=None, rates=(200.0, 1e5),
-        backends=("jnp", "pallas"), requests=128):
+def bench_multi_model(rates=(400.0,), skew: float = 10.0, side: int = 8,
+                      n_classes: int = 4, requests: int = 256,
+                      max_batch: int = 16, epochs: int = 2, seed: int = 0,
+                      backend: str = "pallas", csv: bool = True):
+    """Two models, one engine, ``skew``:1 Poisson mix at each combined
+    rate: per-model throughput/latency + the minority fairness ratio
+    (completion share / arrival share — 1.0 is perfectly proportional)."""
+    ds = make_synthetic(512, 128, side, n_classes, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec_a = deep_synth_spec(side=side, depth=2, n_classes=n_classes,
+                             hidden_hc=8, hidden_mc=16, backend=backend)
+    spec_b = deep_synth_spec(side=side, depth=1, n_classes=n_classes,
+                             hidden_hc=4, hidden_mc=8, backend=backend)
+    tr_a, tr_b = Trainer(spec_a, seed=seed), Trainer(spec_b, seed=seed + 1)
+    tr_a.fit(xt, ds.y_train, epochs=epochs, batch=64)
+    tr_b.fit(xt, ds.y_train, epochs=epochs, batch=64)
+    svc = BCPNNService.multi(
+        {"major": (tr_a.state, spec_a), "minor": (tr_b.state, spec_b)},
+        max_batch=max_batch)
+    svc.warmup()
+    rows = []
+    for rate in rates:
+        for slot in ("major", "minor"):
+            svc._slots[slot].metrics = ServeMetrics()
+        svc.start(warmup=False)
+        r_major = rate * skew / (skew + 1.0)
+        r_minor = rate / (skew + 1.0)
+        reports = run_multi_open_loop(
+            svc,
+            {"major": StreamSpec(xe, ds.y_test, rate_hz=r_major),
+             "minor": StreamSpec(xe, ds.y_test, rate_hz=r_minor)},
+            n_requests=requests, seed=seed)
+        svc.stop()
+        snap = svc.snapshot()
+        total = max(1.0, snap["completed"])
+        for name in ("major", "minor"):
+            per = snap["per_model"][name]
+            arrival_share = len(reports[name].results) / total
+            completion_share = per["completed"] / total
+            row = {
+                "model": name,
+                "offered_hz": rate,
+                "images_per_s": per["images_per_s"],
+                "p50_ms": per["p50_ms"],
+                "p99_ms": per["p99_ms"],
+                "batch_occupancy": per["batch_occupancy"],
+                "completion_share": completion_share,
+                "fairness_ratio": (completion_share / arrival_share
+                                   if arrival_share else 0.0),
+                "max_latency_ms": reports[name].max_latency_ms,
+            }
+            rows.append(row)
+            if csv:
+                tag = f"serve_multi_{name}_r{rate:g}"
+                print(f"{tag},{row['images_per_s']:.1f},images_per_s")
+                print(f"{tag},{row['p99_ms']:.2f},p99_ms")
+                print(f"{tag},{row['fairness_ratio']:.3f},fairness_ratio")
+    return rows
+
+
+def run(csv=True, json_path="BENCH_serve.json", rates=(200.0, 1e5),
+        backends=("jnp", "pallas"), requests=128,
+        multi_rates=(400.0, 1e5)):
     rows = []
     for backend in backends:
         rows += bench_backend(backend, rates, requests=requests, csv=csv)
-    summary = {"rows": rows, "device": jax.default_backend()}
+    multi_rows = bench_multi_model(rates=multi_rates,
+                                   requests=max(requests, 256), csv=csv)
+    summary = {"rows": rows, "multi_model": multi_rows,
+               "device": jax.default_backend()}
     if csv:
         print("bench_serve_json=" + json.dumps(summary))
     if json_path:
@@ -86,14 +159,19 @@ def run(csv=True, json_path=None, rates=(200.0, 1e5),
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default=None,
-                    help="also write the JSON summary to this path")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="write the JSON summary to this path "
+                         "('' disables)")
     ap.add_argument("--rates", default="200,100000",
                     help="comma-separated offered rates (req/s)")
+    ap.add_argument("--multi-rates", default="400,100000",
+                    help="combined offered rates for the 10:1 "
+                         "multi-model sweep")
     ap.add_argument("--backends", default="jnp,pallas")
     ap.add_argument("--requests", type=int, default=128)
     args = ap.parse_args()
-    run(json_path=args.json,
+    run(json_path=args.json or None,
         rates=tuple(float(r) for r in args.rates.split(",")),
         backends=tuple(args.backends.split(",")),
-        requests=args.requests)
+        requests=args.requests,
+        multi_rates=tuple(float(r) for r in args.multi_rates.split(",")))

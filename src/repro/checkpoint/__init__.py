@@ -1,1 +1,3 @@
-from .ckpt import CheckpointManager
+from .ckpt import CheckpointManager, load_model, load_models
+
+__all__ = ["CheckpointManager", "load_model", "load_models"]

@@ -21,7 +21,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -180,3 +180,49 @@ class CheckpointManager:
             a = jax.numpy.asarray(a).astype(ref.dtype)
             out.append(jax.device_put(a, shd) if shd is not None else a)
         return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------- serving-model loading --
+
+def load_model(directory: str, step: Optional[int] = None,
+               seed: int = 0) -> Tuple[Any, Any, int]:
+    """(state, spec, step) from a checkpoint directory ALONE — the serving
+    deployment loader: the NetworkSpec rides in the manifest ``extra``
+    (written by ``Trainer.save``), so no out-of-band config is needed to
+    rebuild and restore the network.  Raises FileNotFoundError when the
+    directory holds no checkpoint and ValueError when the manifest lacks
+    the spec (pre-serving checkpoints: re-save with ``Trainer.save``)."""
+    # Lazy: core.trainer imports this package, so the dependency must
+    # point one way at import time.
+    from ..core.network import init_deep, spec_from_dict
+
+    mgr = CheckpointManager(directory)
+    step = step if step is not None else mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    extra = mgr.read_extra(step)
+    if not extra or "spec" not in extra:
+        raise ValueError(
+            f"checkpoint step_{step} under {directory} has no spec "
+            f"metadata; re-save it with Trainer.save")
+    spec = spec_from_dict(extra["spec"])
+    state = mgr.restore(step, init_deep(spec, jax.random.PRNGKey(seed)))
+    return state, spec, step
+
+
+def load_models(directories: Sequence[str],
+                seed: int = 0) -> Dict[str, Tuple[Any, Any]]:
+    """Multi-model manifest load: ``{name: (state, spec)}`` for one
+    serving engine from several checkpoint directories.  Names derive
+    from each directory's basename (deduplicated with ``#i`` suffixes so
+    two deployments of the same artifact can be hosted side by side)."""
+    out: Dict[str, Tuple[Any, Any]] = {}
+    for d in directories:
+        base = os.path.basename(os.path.normpath(d)) or "model"
+        name, i = base, 1
+        while name in out:
+            i += 1
+            name = f"{base}#{i}"
+        state, spec, _ = load_model(d, seed=seed)
+        out[name] = (state, spec)
+    return out

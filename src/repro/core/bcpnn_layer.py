@@ -156,16 +156,22 @@ def validate_patchy_state(proj: Projection, spec: ProjSpec,
             raise ValueError(
                 f"{where}: compact leaf {name} has shape "
                 f"{tuple(leaf.shape)}, expected {want}")
-    mask = np.asarray(jax.device_get(proj.mask))
-    table = np.asarray(jax.device_get(proj.table))
-    for j in range(hj):
-        live = np.flatnonzero(mask[:, j])
-        if not np.array_equal(np.sort(table[j]), live):
-            raise ValueError(
-                f"{where}: compact index table disagrees with the mask at "
-                f"post-HC {j} (table {np.sort(table[j]).tolist()} vs mask "
-                f"{live.tolist()}); rebuild the table from the mask "
-                f"(core.compact.build_table) before serving.")
+    if not _compact_ops().table_matches_mask(proj.mask, proj.table,
+                                             spec.nact):
+        mask = np.asarray(jax.device_get(proj.mask))
+        table = np.asarray(jax.device_get(proj.table))
+        for j in range(hj):
+            live = np.flatnonzero(mask[:, j])
+            if not np.array_equal(np.sort(table[j]), live):
+                raise ValueError(
+                    f"{where}: compact index table disagrees with the mask "
+                    f"at post-HC {j} (table {np.sort(table[j]).tolist()} vs "
+                    f"mask {live.tolist()}); rebuild the table from the "
+                    f"mask (core.compact.build_table) before serving.")
+        raise ValueError(
+            f"{where}: compact index table disagrees with the mask; "
+            f"rebuild it from the mask (core.compact.build_table) before "
+            f"serving.")
 
 
 def apply_hc_mask(w: jax.Array, mask: jax.Array, spec: ProjSpec) -> jax.Array:
@@ -329,6 +335,25 @@ def _learn_jnp(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> 
     b = x.shape[0]
     return apply_dense_stats(proj, spec, jnp.mean(x, axis=0),
                              jnp.mean(y, axis=0), (x.T @ y) / b)
+
+
+def maybe_rewire(proj: Projection, spec: ProjSpec) -> Projection:
+    """Trace-counter-keyed structural plasticity: rewire when the
+    projection's own trace clock hits a ``struct_every`` multiple, else
+    pass through.  jit-safe (``lax.cond``), and the one rewire entry both
+    the trainer's unsupervised step and the serving engine's
+    online-learning fold go through — ``rewire`` rebuilds the mask AND
+    (for compact-resident projections) the index-table leaf together, so
+    a state that passed ``validate_patchy_state`` at deployment keeps its
+    invariants across any number of in-deployment rewires."""
+    if spec.struct_every <= 0:
+        return proj
+    return jax.lax.cond(
+        proj.traces.t % spec.struct_every == 0,
+        lambda p: rewire(p, spec),
+        lambda p: p,
+        proj,
+    )
 
 
 def rewire(proj: Projection, spec: ProjSpec) -> Projection:

@@ -93,6 +93,32 @@ def cached_table(mask: jax.Array, nact: int) -> jax.Array:
     return table
 
 
+def table_matches_mask(mask, table, nact: int) -> bool:
+    """Host-side vectorized check that a (Hj, nact) index table routes
+    exactly the live pre-HCs of an exactly-nact (Hi, Hj) mask — the
+    deployment-boundary invariant ``validate_patchy_state`` enforces at
+    service construction and ``BCPNNService.revalidate`` re-checks after
+    in-deployment rewires.  Scatters the table back into a mask and
+    compares whole arrays (no per-column python loop): duplicate or
+    out-of-range table entries produce a column with fewer than nact
+    ones, which an exactly-nact mask can never match."""
+    import numpy as np
+    m = np.asarray(jax.device_get(mask))
+    t = np.asarray(jax.device_get(table))
+    hi, hj = m.shape
+    if t.shape != (hj, nact) or (t < 0).any() or (t >= hi).any():
+        return False
+    ts = np.sort(t, axis=1)
+    if nact > 1 and (np.diff(ts, axis=1) <= 0).any():
+        # duplicate entries would scatter onto the same mask cell and
+        # could spuriously match an under-full column — a valid table has
+        # nact DISTINCT pre-HCs per row
+        return False
+    want = np.zeros((hi, hj), m.dtype)
+    want[t, np.arange(hj)[:, None]] = 1
+    return bool(np.array_equal(want, m))
+
+
 def unit_indices(table: jax.Array, mi: int, k_pad: int = 0,
                  sentinel: int = -1) -> jax.Array:
     """Expand the HC table to unit-level gather indices (Hj, nact*Mi+k_pad).

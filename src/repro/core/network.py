@@ -38,8 +38,8 @@ from .bcpnn_layer import (
     forward,
     init_projection,
     learn,
+    maybe_rewire,
     normalize,
-    rewire,
     support,
 )
 from .hypercolumns import LayerGeom
@@ -237,14 +237,7 @@ def train_projection_step(state: DeepState, spec: NetworkSpec, h: jax.Array,
     pspec = spec.projs[layer]
     key, sub = jax.random.split(state.key)
     y = _noisy_rates(state.projs[layer], pspec, h, sub)
-    proj = learn(state.projs[layer], pspec, h, y)
-    if pspec.struct_every > 0:
-        proj = jax.lax.cond(
-            proj.traces.t % pspec.struct_every == 0,
-            lambda p: rewire(p, pspec),
-            lambda p: p,
-            proj,
-        )
+    proj = maybe_rewire(learn(state.projs[layer], pspec, h, y), pspec)
     projs = state.projs[:layer] + (proj,) + state.projs[layer + 1:]
     return DeepState(projs=projs, readout=state.readout,
                      step=state.step + 1, key=key)
@@ -266,6 +259,44 @@ def supervised_readout_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
     y = jax.nn.one_hot(labels, spec.n_classes, dtype=h.dtype)
     ro = learn(state.readout, spec.readout, h, y)
     return DeepState(projs=state.projs, readout=ro,
+                     step=state.step + 1, key=state.key)
+
+
+def online_learn_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
+                      labels: jax.Array,
+                      learn_stack: bool = True) -> DeepState:
+    """One serving-mode learning step on a labeled batch.
+
+    With ``learn_stack=True`` every stack projection learns from its own
+    deterministic activations — post rates from the current weights, no
+    exploration noise (deployment refines an already-annealed
+    representation, and determinism is what makes a served learning
+    stream bit-reproducible against an offline replay of the same
+    batches) — with the ``struct_every`` structural-plasticity cold path
+    riding along (``maybe_rewire``, keyed on each projection's own trace
+    clock, so receptive fields keep refining in deployment).  The
+    readout then takes the standard supervised update with label
+    one-hots as target activity.
+
+    With ``learn_stack=False`` the stack is frozen and this computes
+    exactly ``supervised_readout_step`` (the readout-only online mode).
+
+    Streaming order matches training: each layer's activations come from
+    the PRE-update weights (activation stage, then plasticity stage),
+    and upper layers see the frozen-lower-layer rates of this batch.
+    """
+    h = x
+    projs = []
+    for proj, pspec in zip(state.projs, spec.projs):
+        y = forward(proj, pspec, h)
+        if learn_stack:
+            projs.append(maybe_rewire(learn(proj, pspec, h, y), pspec))
+        else:
+            projs.append(proj)
+        h = y
+    y1h = jax.nn.one_hot(labels, spec.n_classes, dtype=h.dtype)
+    ro = learn(state.readout, spec.readout, h, y1h)
+    return DeepState(projs=tuple(projs), readout=ro,
                      step=state.step + 1, key=state.key)
 
 

@@ -1,13 +1,14 @@
-"""Serving subsystem: microbatched streaming inference + online learning
-for trained deep BCPNN networks (DESIGN.md §6)."""
+"""Serving subsystem: multi-model microbatched streaming inference +
+in-deployment online learning for trained deep BCPNN networks
+(DESIGN.md §6)."""
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
-from .engine import BCPNNService, ServeResult
-from .loadgen import LoadReport, run_open_loop
+from .engine import BCPNNService, ServeResult, cycle_batch
+from .loadgen import LoadReport, StreamSpec, run_multi_open_loop, run_open_loop
 from .metrics import ServeMetrics
 
 __all__ = [
     "MicroBatcher", "Request", "default_buckets", "pad_group", "pick_bucket",
-    "BCPNNService", "ServeResult",
-    "LoadReport", "run_open_loop",
+    "BCPNNService", "ServeResult", "cycle_batch",
+    "LoadReport", "StreamSpec", "run_multi_open_loop", "run_open_loop",
     "ServeMetrics",
 ]

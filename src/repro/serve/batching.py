@@ -59,6 +59,7 @@ class Request:
     id: int
     x: np.ndarray                 # (N,) encoded input rates
     enqueue_t: float
+    model: str = "default"        # owning model in a multi-model engine
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[Any] = None  # ServeResult once completed
     error: Optional[BaseException] = None
@@ -79,18 +80,35 @@ class MicroBatcher:
     def depth(self) -> int:
         return self._q.qsize()
 
-    def next_group(self, timeout_s: float = 0.05) -> List[Request]:
+    def next_group(self, timeout_s: float = 0.05,
+                   target: Optional[int] = None) -> List[Request]:
         """Block up to ``timeout_s`` for the first request, then drain the
-        queue for at most ``max_wait_s`` more or until the largest bucket
-        fills.  Returns [] on timeout (lets the engine poll its stop flag
-        and fold pending online-learning feedback between batches)."""
+        queue for at most ``max_wait_s`` more or until the group fills.
+        Returns [] on timeout (lets the engine poll its stop flag and fold
+        pending online-learning feedback between batches).
+
+        ``target`` (optional) caps how large a group the collect loop
+        WAITS for — the engine's adaptive bucket selection passes its
+        predicted bucket here, so a low-rate stream stops dawdling for
+        arrivals that won't come inside the window.  The cap never splits
+        an existing backlog: whatever is already queued when the group
+        starts is always admitted up to ``max_batch``.
+        """
         try:
-            first = self._q.get(timeout=timeout_s)
+            if timeout_s > 0:
+                first = self._q.get(timeout=timeout_s)
+            else:
+                first = self._q.get_nowait()
         except queue.Empty:
             return []
+        cap = self.max_batch
+        if target is not None:
+            backlog = 1 + self._q.qsize()
+            cap = max(min(target, self.max_batch),
+                      min(backlog, self.max_batch))
         group = [first]
         deadline = time.perf_counter() + self.max_wait_s
-        while len(group) < self.max_batch:
+        while len(group) < cap:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
                 # past the window: keep only what is already queued

@@ -1,37 +1,65 @@
-"""BCPNNService — the streaming serving engine for trained DeepStates.
+"""BCPNNService — the multi-model streaming serving engine.
 
-One worker thread owns the network state and drains the admission queue
-into shape-bucketed microbatches (batching.py), running the inference-only
-path (``core.network.infer``) per bucket — each bucket shape compiles once
-and is reused forever, the jax analogue of the paper's pre-synthesized
-inference bitstream.  With ``online_learning=True`` the engine also owns a
-feedback buffer of labeled samples and folds it into the readout
-projection via ``supervised_readout_step`` *between* inference
-microbatches: the same deployment serves traffic and keeps learning from a
-label stream, the runtime-selectable analogue of the follow-up paper's
-inference-vs-training reconfiguration (no reflash — just a flag).
+One worker thread owns N checkpointed ``DeepState``s (each a "model
+slot": its own spec, shape buckets, metrics and compiled-once jits per
+(model, bucket) — the jax analogue of a library of pre-synthesized
+bitstreams selected at runtime) and drains a SHARED admission front into
+shape-bucketed microbatches:
+
+  * **Per-model fairness**: each slot has its own admission queue; the
+    worker round-robins a rotating cursor over slots with pending work,
+    taking at most one microbatch per model per pass — under a 10:1
+    skewed arrival mix the minority model is never more than one
+    microbatch away from service, so no model starves behind another's
+    burst (a single shared FIFO would serve them strictly in arrival
+    order; per-model queues + round-robin is the deficit-round-robin
+    analogue for unit-cost quanta).
+  * **Adaptive bucket selection**: each model's active bucket is
+    re-derived from its observed arrival-rate and group-occupancy
+    windows (``ServeMetrics``): the collect loop stops waiting once the
+    group reaches the bucket the observed rate can fill inside the batch
+    window, instead of dawdling ``max_wait_ms`` for arrivals that won't
+    come — low-rate streams get small-bucket latency, bursts still fill
+    the largest bucket (an existing backlog always overrides the cap).
+    All buckets stay compiled (warmup covers the full set); adaptation
+    only moves which bucket a group WAITS for.
+  * **Online learning in deployment** (``online_learning=True``): labeled
+    feedback buffers per model and is folded between inference
+    microbatches.  ``learn_stack=False`` updates only the readout
+    (``supervised_readout_step``); ``learn_stack=True`` additionally
+    runs deterministic plasticity on every stack projection and the
+    ``struct_every`` structural-plasticity cold path
+    (``core.network.online_learn_step``) — receptive fields keep
+    rewiring while the same deployment serves traffic, and the fold is
+    bit-reproducible against an offline replay of the same feedback
+    batches.
 
 Thread model: ``submit``/``feedback`` may be called from any thread (they
 only enqueue host arrays); all device work — inference and learning —
-happens on the single worker thread, so the state needs no lock and
+happens on the single worker thread, so no model state needs a lock and
 learning can never race an in-flight forward pass.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import threading
 import time
-from typing import Dict, Optional, Sequence
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.bcpnn_layer import validate_patchy_state
-from ..core.network import as_spec, infer, supervised_readout_step
+from ..core.network import (
+    as_spec, infer, online_learn_step, supervised_readout_step,
+)
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .metrics import ServeMetrics
+
+DEFAULT_MODEL = "default"
 
 
 @dataclasses.dataclass
@@ -42,47 +70,92 @@ class ServeResult:
     probs: np.ndarray   # (n_classes,)
     pred: int
     latency_ms: float
+    model: str = DEFAULT_MODEL
+
+
+def cycle_batch(items: Sequence[Tuple[np.ndarray, int]],
+                batch: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(x, y) arrays for one learn fold: a short group is padded by
+    CYCLING the genuine samples (every row stays real data, so the
+    batch-mean trace update needs no mask — padding only reweights within
+    the batch), keeping a single compiled learn shape.  Module-level so
+    an offline parity reference can replay the engine's exact batch
+    composition."""
+    n = len(items)
+    idx = [i % n for i in range(batch)]
+    x = np.stack([items[i][0] for i in idx]).astype(np.float32)
+    y = np.asarray([items[i][1] for i in idx], np.int32)
+    return x, y
+
+
+@dataclasses.dataclass
+class _ModelSlot:
+    """Everything one hosted model owns inside the engine."""
+
+    name: str
+    state: Any                       # DeepState (worker thread only)
+    spec: Any                        # NetworkSpec
+    batcher: MicroBatcher
+    metrics: ServeMetrics
+    infer_fn: Any
+    learn_fn: Any
+    feedback: collections.deque
+    target_bucket: int               # adaptive active bucket (worker only)
+
+
+def _validate_state(state, spec, name: str) -> None:
+    # Deployment boundary for arbitrary (possibly pre-exactly-nact-fix or
+    # hand-migrated) checkpoints: the patchy infer path assumes the
+    # exactly-nact mask invariant, and compact-resident projections
+    # additionally assume their index-table leaf agrees with the mask —
+    # verify both on the concrete state before any request is served (a
+    # drifted table would route the WRONG synapses silently).
+    for l, (proj, pspec) in enumerate(zip(state.projs, spec.projs)):
+        validate_patchy_state(proj, pspec, where=f"model {name!r} stack "
+                                                 f"proj {l}")
+    validate_patchy_state(state.readout, spec.readout,
+                          where=f"model {name!r} readout")
 
 
 class BCPNNService:
-    """Microbatched streaming front-end over a trained ``DeepState``.
+    """Microbatched streaming front-end over trained ``DeepState``s.
 
     API: ``submit`` (async admission) + ``result`` (blocking collect),
     ``classify`` (synchronous convenience), ``feedback`` (labeled sample
-    for the online-learning mode), ``metrics`` (aggregate snapshot).
+    for the online-learning mode), ``metrics``/``snapshot`` (aggregate +
+    per-model telemetry).  Constructed single-model
+    (``BCPNNService(state, spec)``) requests need no model name; use
+    ``BCPNNService.multi({...})`` / ``add_model`` to host several
+    checkpoints behind one admission front, then route with
+    ``submit(x, model=...)``.
     """
 
     def __init__(self, state, spec_or_cfg, max_batch: int = 64,
                  buckets: Optional[Sequence[int]] = None,
                  max_wait_ms: float = 2.0, online_learning: bool = False,
                  feedback_batch: int = 32, metrics_window: int = 4096,
-                 poll_ms: float = 20.0, result_retention: int = 4096):
-        self.spec = as_spec(spec_or_cfg)
-        self.state = state
-        # Deployment boundary for arbitrary (possibly pre-exactly-nact-fix
-        # or hand-migrated) checkpoints: the patchy infer path assumes the
-        # exactly-nact mask invariant, and compact-resident projections
-        # additionally assume their index-table leaf agrees with the mask
-        # — verify both on the concrete state before any request is
-        # served (a drifted table would route the WRONG synapses
-        # silently).
-        for l, (proj, pspec) in enumerate(zip(state.projs, self.spec.projs)):
-            validate_patchy_state(proj, pspec, where=f"stack proj {l}")
-        validate_patchy_state(state.readout, self.spec.readout,
-                              where="readout")
+                 poll_ms: float = 20.0, result_retention: int = 4096,
+                 learn_stack: bool = False, adaptive_buckets: bool = True,
+                 feedback_eager: bool = True, name: str = DEFAULT_MODEL):
         self.online_learning = online_learning
+        self.learn_stack = learn_stack
+        self.adaptive_buckets = adaptive_buckets
+        # eager: fold partial feedback batches whenever the worker idles
+        # (lowest label-to-weight latency).  Non-eager: fold only FULL
+        # batches until the stop() drain — the fold compositions then
+        # depend only on the feedback stream order, never on worker
+        # timing, which is what makes a served learning run bit-exactly
+        # replayable offline (the parity tests rely on this).
+        self.feedback_eager = feedback_eager
         self.feedback_batch = feedback_batch
+        self.metrics_window = metrics_window
         self._poll_s = poll_ms * 1e-3
-        self._batcher = MicroBatcher(buckets or default_buckets(max_batch),
-                                     max_wait_s=max_wait_ms * 1e-3)
-        self.metrics = ServeMetrics(window=metrics_window)
-        spec = self.spec
-        self._infer_fn = jax.jit(
-            lambda st, x, v: infer(st, spec, x, valid=v))
-        self._learn_fn = jax.jit(
-            lambda st, x, y: supervised_readout_step(st, spec, x, y))
-        self._feedback: collections.deque = collections.deque()
-        self._feedback_lock = threading.Lock()
+        self._buckets = tuple(sorted(buckets or default_buckets(max_batch)))
+        self._max_wait_s = max_wait_ms * 1e-3
+        self._slots: Dict[str, _ModelSlot] = {}
+        self._order: List[str] = []          # round-robin service order
+        self._cursor = 0                     # next slot index to consider
+        self._fb_cursor = 0                  # next slot to fold feedback
         self._requests: Dict[int, Request] = {}
         self._requests_lock = threading.Lock()
         # Completed-but-uncollected results are retained for the most
@@ -93,6 +166,7 @@ class BCPNNService:
         self._done_ids: collections.deque = collections.deque()
         self._next_id = 0
         self._stop = threading.Event()
+        self._work = threading.Event()       # any-slot work signal
         # Admission gate: submit()/feedback() enqueue under this lock and
         # stop() sets the stop flag under it, so every enqueue strictly
         # precedes the flag flip — the worker can then treat "stop set +
@@ -100,6 +174,107 @@ class BCPNNService:
         # for a straggler to land in a dead queue.
         self._admit_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
+        self.add_model(name, state, spec_or_cfg)
+
+    @classmethod
+    def multi(cls, models: Mapping[str, Tuple[Any, Any]],
+              **kwargs) -> "BCPNNService":
+        """Multi-model engine from ``{name: (state, spec)}`` — every
+        model behind one shared admission front, served fairly."""
+        items = list(models.items())
+        if not items:
+            raise ValueError("multi() needs at least one model")
+        name0, (state0, spec0) = items[0]
+        svc = cls(state0, spec0, name=name0, **kwargs)
+        for name, (state, spec) in items[1:]:
+            svc.add_model(name, state, spec)
+        return svc
+
+    # ---------------------------------------------------------- models ----
+    def add_model(self, name: str, state, spec_or_cfg) -> None:
+        """Register one checkpointed model (before ``start`` only — slot
+        registration is not synchronized against the worker's round-robin
+        scan)."""
+        if self._thread is not None:
+            raise RuntimeError("cannot add a model to a running service")
+        if name in self._slots:
+            raise ValueError(f"model {name!r} already registered")
+        spec = as_spec(spec_or_cfg)
+        _validate_state(state, spec, name)
+        infer_fn = jax.jit(lambda st, x, v, _spec=spec:
+                           infer(st, _spec, x, valid=v))
+        if self.learn_stack:
+            learn_fn = jax.jit(lambda st, x, y, _spec=spec:
+                               online_learn_step(st, _spec, x, y,
+                                                 learn_stack=True))
+        else:
+            learn_fn = jax.jit(lambda st, x, y, _spec=spec:
+                               supervised_readout_step(st, _spec, x, y))
+        self._slots[name] = _ModelSlot(
+            name=name, state=state, spec=spec,
+            batcher=MicroBatcher(self._buckets, max_wait_s=self._max_wait_s),
+            metrics=ServeMetrics(window=self.metrics_window),
+            infer_fn=infer_fn, learn_fn=learn_fn,
+            feedback=collections.deque(),
+            target_bucket=self._buckets[-1],
+        )
+        self._order.append(name)
+
+    def models(self) -> Tuple[str, ...]:
+        return tuple(self._order)
+
+    def _slot(self, model: Optional[str]) -> _ModelSlot:
+        if model is None:
+            if len(self._slots) == 1:
+                return self._slots[self._order[0]]
+            raise ValueError(
+                f"multi-model service hosts {sorted(self._slots)}; pass "
+                f"model=<name> to route the request")
+        try:
+            return self._slots[model]
+        except KeyError:
+            raise KeyError(f"unknown model {model!r}; hosted models: "
+                           f"{sorted(self._slots)}") from None
+
+    def model_state(self, model: Optional[str] = None):
+        """The current DeepState of one hosted model (the worker owns it
+        while running — read after ``stop`` for a settled value)."""
+        return self._slot(model).state
+
+    def model_spec(self, model: Optional[str] = None):
+        return self._slot(model).spec
+
+    def revalidate(self) -> None:
+        """Re-run the deployment-boundary patchy/compact invariants on the
+        CURRENT states — cheap (vectorized host check), useful after a
+        run with in-deployment rewires."""
+        for slot in self._slots.values():
+            _validate_state(slot.state, slot.spec, slot.name)
+
+    # --------------------------------------- single-model back-compat -----
+    @property
+    def state(self):
+        return self.model_state()
+
+    @state.setter
+    def state(self, value):
+        self._slot(None).state = value
+
+    @property
+    def spec(self):
+        return self.model_spec()
+
+    @property
+    def metrics(self) -> ServeMetrics:
+        return self._slot(None).metrics
+
+    @metrics.setter
+    def metrics(self, value: ServeMetrics) -> None:
+        self._slot(None).metrics = value
+
+    @property
+    def _feedback(self) -> collections.deque:
+        return self._slot(None).feedback
 
     # ---------------------------------------------------------- lifecycle --
     def start(self, warmup: bool = True) -> "BCPNNService":
@@ -121,28 +296,32 @@ class BCPNNService:
             return
         with self._admit_lock:
             self._stop.set()
+            self._work.set()
         self._thread.join()
         self._thread = None
 
     def warmup(self) -> None:
-        """Pre-compile every bucket shape (and the learn shape) so no
-        request pays a compile on the serving path."""
-        ni = self.spec.input_geom.N
-        for b in self._batcher.buckets:
-            probs, _ = self._infer_fn(self.state,
-                                      jnp.zeros((b, ni), jnp.float32),
-                                      jnp.zeros((b,), jnp.float32))
-            jax.block_until_ready(probs)
-        if self.online_learning:
-            st = self._learn_fn(self.state,
-                                jnp.zeros((self.feedback_batch, ni),
-                                          jnp.float32),
-                                jnp.zeros((self.feedback_batch,), jnp.int32))
-            jax.block_until_ready(st.readout.w)  # discard: compile only
+        """Pre-compile every (model, bucket) shape (and the learn shapes)
+        so no request pays a compile on the serving path."""
+        for slot in self._slots.values():
+            ni = slot.spec.input_geom.N
+            for b in self._buckets:
+                probs, _ = slot.infer_fn(slot.state,
+                                         jnp.zeros((b, ni), jnp.float32),
+                                         jnp.zeros((b,), jnp.float32))
+                jax.block_until_ready(probs)
+            if self.online_learning:
+                st = slot.learn_fn(
+                    slot.state,
+                    jnp.zeros((self.feedback_batch, ni), jnp.float32),
+                    jnp.zeros((self.feedback_batch,), jnp.int32))
+                jax.block_until_ready(st.readout.w)  # discard: compile only
 
     # ---------------------------------------------------------- front-end --
-    def submit(self, x: np.ndarray) -> int:
-        """Admit one sample ((N,) encoded rates); returns a request id."""
+    def submit(self, x: np.ndarray, model: Optional[str] = None) -> int:
+        """Admit one sample ((N,) encoded rates); returns a request id.
+        Multi-model services route by ``model`` name."""
+        slot = self._slot(model)
         with self._admit_lock:
             if self._thread is None or self._stop.is_set():
                 raise RuntimeError("service is not running")
@@ -150,10 +329,11 @@ class BCPNNService:
                 rid = self._next_id
                 self._next_id += 1
                 req = Request(id=rid, x=np.asarray(x, np.float32),
-                              enqueue_t=time.perf_counter())
+                              enqueue_t=time.perf_counter(), model=slot.name)
                 self._requests[rid] = req
-            self.metrics.record_submit()
-            self._batcher.put(req)
+            slot.metrics.record_submit()
+            slot.batcher.put(req)
+            self._work.set()
         return rid
 
     def result(self, request_id: int, timeout: Optional[float] = None) -> ServeResult:
@@ -176,49 +356,117 @@ class BCPNNService:
             raise req.error
         return req.result
 
-    def classify(self, x: np.ndarray, timeout: Optional[float] = None) -> ServeResult:
+    def classify(self, x: np.ndarray, timeout: Optional[float] = None,
+                 model: Optional[str] = None) -> ServeResult:
         """Synchronous convenience: submit + wait."""
-        return self.result(self.submit(x), timeout=timeout)
+        return self.result(self.submit(x, model=model), timeout=timeout)
 
-    def feedback(self, x: np.ndarray, label: int) -> None:
+    def feedback(self, x: np.ndarray, label: int,
+                 model: Optional[str] = None) -> None:
         """Queue one labeled sample for the online-learning mode."""
         if not self.online_learning:
             raise RuntimeError("service was built with online_learning=False")
+        slot = self._slot(model)
         with self._admit_lock:
             if self._thread is None or self._stop.is_set():
                 raise RuntimeError("service is not running")
-            with self._feedback_lock:
-                self._feedback.append((np.asarray(x, np.float32), int(label)))
+            slot.feedback.append((np.asarray(x, np.float32), int(label)))
+            self._work.set()
 
-    def queue_depth(self) -> int:
-        return self._batcher.depth()
+    def queue_depth(self, model: Optional[str] = None) -> int:
+        if model is None and len(self._slots) > 1:
+            return sum(s.batcher.depth() for s in self._slots.values())
+        return self._slot(model).batcher.depth()
 
-    def snapshot(self) -> Dict[str, float]:
-        return self.metrics.snapshot(queue_depth=self.queue_depth())
+    def active_buckets(self, model: Optional[str] = None) -> Tuple[int, ...]:
+        """The bucket subset the adaptive policy currently collects
+        toward for one model (the full set stays compiled; larger
+        buckets re-activate instantly when a backlog demands them)."""
+        target = self._slot(model).target_bucket
+        return tuple(b for b in self._buckets if b <= target)
+
+    def snapshot(self, model: Optional[str] = None) -> Dict[str, float]:
+        """Aggregate engine snapshot; multi-model services additionally
+        carry a ``per_model`` breakdown (each with its adaptive
+        ``target_bucket``).  ``model=<name>`` narrows to one model."""
+        if model is not None:
+            slot = self._slot(model)
+            out = slot.metrics.snapshot(queue_depth=slot.batcher.depth())
+            out["target_bucket"] = float(slot.target_bucket)
+            return out
+        if len(self._slots) == 1:
+            return self.snapshot(model=self._order[0])
+        out = ServeMetrics.aggregate(
+            (s.metrics for s in self._slots.values()),
+            queue_depth=self.queue_depth())
+        out["per_model"] = {name: self.snapshot(model=name)
+                            for name in self._order}
+        return out
 
     # ------------------------------------------------------------- worker --
     def _run(self) -> None:
         while True:
-            group = self._batcher.next_group(timeout_s=self._poll_s)
+            group, slot = self._next_work()
             if group:
-                self._execute(group)
+                self._execute(slot, group)
             if self.online_learning:
                 # Fold between microbatches: immediately when a full learn
-                # batch is buffered, opportunistically when idle.
-                self._fold_feedback(force=not group)
+                # batch is buffered, opportunistically when idle (eager
+                # mode only).
+                self._fold_feedback(
+                    force=(not group) and self.feedback_eager)
             if self._stop.is_set() and not group \
-                    and self._batcher.depth() == 0:
-                while self.online_learning and self._feedback:
-                    # flush the WHOLE buffer, one learn batch at a time
+                    and all(s.batcher.depth() == 0
+                            for s in self._slots.values()):
+                while self.online_learning \
+                        and any(s.feedback for s in self._slots.values()):
+                    # flush EVERY model's buffer, one learn batch at a time
                     self._fold_feedback(force=True)
                 return
 
-    def _execute(self, group) -> None:
-        bucket = pick_bucket(len(group), self._batcher.buckets)
+    def _next_work(self) -> Tuple[List[Request], Optional[_ModelSlot]]:
+        """Fair scheduler: scan slots round-robin from the cursor, serve
+        the first with pending requests (one microbatch), advance the
+        cursor past it.  When nothing is pending anywhere, block briefly
+        on the shared work signal (a submit landing after the scan re-sets
+        it, so no wakeup is lost — the worker always rescans after the
+        wait)."""
+        n = len(self._order)
+        for i in range(n):
+            slot = self._slots[self._order[(self._cursor + i) % n]]
+            if slot.batcher.depth() > 0:
+                self._adapt(slot)
+                group = slot.batcher.next_group(
+                    timeout_s=0.0,
+                    target=(slot.target_bucket if self.adaptive_buckets
+                            else None))
+                if group:
+                    self._cursor = (self._cursor + i + 1) % n
+                    return group, slot
+        self._work.wait(self._poll_s)
+        self._work.clear()
+        return [], None
+
+    def _adapt(self, slot: _ModelSlot) -> None:
+        """Re-derive the slot's active bucket from its observed windows:
+        the group the arrival rate can fill inside one batch window
+        (with headroom), floored by the recent p90 group size so a
+        steady backlog-driven batch keeps its bucket."""
+        if not self.adaptive_buckets:
+            slot.target_bucket = self._buckets[-1]
+            return
+        window = self._max_wait_s + self._poll_s
+        predicted = slot.metrics.arrival_rate_hz() * window * 1.5
+        want = max(1.0, predicted, slot.metrics.group_p90())
+        n = min(int(math.ceil(want)), self._buckets[-1])
+        slot.target_bucket = pick_bucket(n, self._buckets)
+
+    def _execute(self, slot: _ModelSlot, group: List[Request]) -> None:
+        bucket = pick_bucket(len(group), self._buckets)
         x, valid = pad_group([r.x for r in group], bucket)
         try:
-            probs, pred = self._infer_fn(self.state, jnp.asarray(x),
-                                         jnp.asarray(valid))
+            probs, pred = slot.infer_fn(slot.state, jnp.asarray(x),
+                                        jnp.asarray(valid))
             probs = np.asarray(probs)
             pred = np.asarray(pred)
         except Exception as e:  # complete exceptionally, keep serving
@@ -227,12 +475,13 @@ class BCPNNService:
                 r.done.set()
             return
         t_done = time.perf_counter()
-        self.metrics.record_batch(n_valid=len(group), bucket=bucket)
+        slot.metrics.record_batch(n_valid=len(group), bucket=bucket)
         for i, r in enumerate(group):
             r.result = ServeResult(request_id=r.id, probs=probs[i],
                                    pred=int(pred[i]),
-                                   latency_ms=(t_done - r.enqueue_t) * 1e3)
-            self.metrics.record_complete(t_done - r.enqueue_t)
+                                   latency_ms=(t_done - r.enqueue_t) * 1e3,
+                                   model=slot.name)
+            slot.metrics.record_complete(t_done - r.enqueue_t)
             r.done.set()
             self._done_ids.append(r.id)
         while len(self._done_ids) > self.result_retention:
@@ -241,23 +490,27 @@ class BCPNNService:
                 self._requests.pop(stale, None)
 
     def _fold_feedback(self, force: bool = False) -> None:
-        """One ``supervised_readout_step`` on up to ``feedback_batch``
-        buffered labeled samples.  Short groups are padded by CYCLING the
-        genuine samples (every row stays real data, so the batch-mean trace
-        update needs no mask — padding only reweights within the batch),
-        keeping a single compiled learn shape."""
-        with self._feedback_lock:
-            if not self._feedback:
-                return
-            if len(self._feedback) < self.feedback_batch and not force:
-                return
-            items = [self._feedback.popleft()
-                     for _ in range(min(len(self._feedback),
-                                        self.feedback_batch))]
-        n = len(items)
-        idx = [i % n for i in range(self.feedback_batch)]
-        x = np.stack([items[i][0] for i in idx]).astype(np.float32)
-        y = np.asarray([items[i][1] for i in idx], np.int32)
-        self.state = self._learn_fn(self.state, jnp.asarray(x),
-                                    jnp.asarray(y))
-        self.metrics.record_learn(n)
+        """At most ONE learn fold per call, rotating fairly across models:
+        one ``learn_fn`` step (readout-only or stack+rewire, see
+        ``learn_stack``) on up to ``feedback_batch`` buffered labeled
+        samples of the first slot, from the feedback cursor, that is
+        ready (full batch buffered, or anything buffered under
+        ``force``)."""
+        n = len(self._order)
+        for i in range(n):
+            j = (self._fb_cursor + i) % n
+            slot = self._slots[self._order[j]]
+            with self._admit_lock:
+                if not slot.feedback:
+                    continue
+                if len(slot.feedback) < self.feedback_batch and not force:
+                    continue
+                items = [slot.feedback.popleft()
+                         for _ in range(min(len(slot.feedback),
+                                            self.feedback_batch))]
+            x, y = cycle_batch(items, self.feedback_batch)
+            slot.state = slot.learn_fn(slot.state, jnp.asarray(x),
+                                       jnp.asarray(y))
+            slot.metrics.record_learn(len(items))
+            self._fb_cursor = (j + 1) % n
+            return

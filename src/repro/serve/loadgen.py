@@ -1,4 +1,4 @@
-"""Synthetic open-loop load generator for the serving engine.
+"""Synthetic open-loop load generators for the serving engine.
 
 Open loop means arrivals follow their own clock (Poisson at a target
 rate), never waiting for responses — the honest way to measure a serving
@@ -6,12 +6,18 @@ system, since closed-loop generators self-throttle and hide queueing
 collapse.  Each tick submits one sample from a pool; optionally a labeled
 feedback sample rides along (the online-learning stream), emulating
 deployed traffic where a fraction of predictions later gets ground truth.
+
+``run_open_loop`` drives one model's stream; ``run_multi_open_loop``
+merges several models' independent Poisson processes into one arrival
+stream (superposition: combined rate = Σ rates, each arrival belongs to
+model m with probability rate_m/Σ), the skewed multi-tenant load the
+engine's per-model fairness is measured under.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 
@@ -20,7 +26,7 @@ from .engine import BCPNNService, ServeResult
 
 @dataclasses.dataclass
 class LoadReport:
-    """Outcome of one open-loop run."""
+    """Outcome of one open-loop run (one model's stream)."""
 
     results: List[ServeResult]   # in submission order
     labels: np.ndarray           # (n,) ground truth per request
@@ -31,6 +37,10 @@ class LoadReport:
     def achieved_rate_hz(self) -> float:
         return len(self.results) / max(self.wall_s, 1e-9)
 
+    @property
+    def max_latency_ms(self) -> float:
+        return max((r.latency_ms for r in self.results), default=0.0)
+
     def accuracy(self, lo: float = 0.0, hi: float = 1.0) -> float:
         """Accuracy of the served predictions over the [lo, hi) fraction
         of the request stream (e.g. (0, .5) vs (.5, 1) shows online
@@ -39,6 +49,18 @@ class LoadReport:
         a, b = int(lo * n), max(int(lo * n) + 1, int(hi * n))
         pred = np.asarray([r.pred for r in self.results[a:b]])
         return float(np.mean(pred == self.labels[a:b]))
+
+
+@dataclasses.dataclass
+class StreamSpec:
+    """One model's traffic in a multi-model run."""
+
+    x_pool: np.ndarray
+    y_pool: np.ndarray
+    rate_hz: float
+    feedback_frac: float = 0.0
+    fb_x: Optional[np.ndarray] = None  # defaults to x_pool
+    fb_y: Optional[np.ndarray] = None
 
 
 def run_open_loop(
@@ -52,6 +74,7 @@ def run_open_loop(
     fb_x: Optional[np.ndarray] = None,
     fb_y: Optional[np.ndarray] = None,
     timeout_s: float = 120.0,
+    model: Optional[str] = None,
 ) -> LoadReport:
     """Submit ``n_requests`` samples (drawn with replacement from the
     pool) at Poisson-``rate_hz``, then collect every result.
@@ -59,7 +82,8 @@ def run_open_loop(
     With ``feedback_frac > 0`` each tick also submits, with that
     probability, one labeled sample from the feedback pool (defaults to
     the request pool) — the label stream the online-learning mode folds
-    into the readout while inference traffic keeps flowing.
+    into the network while inference traffic keeps flowing.  ``model``
+    routes the whole stream to one model of a multi-model service.
     """
     rng = np.random.default_rng(seed)
     picks = rng.integers(0, len(x_pool), size=n_requests)
@@ -74,11 +98,67 @@ def run_open_loop(
         delay = next_t - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
-        ids.append(service.submit(x_pool[i]))
+        ids.append(service.submit(x_pool[i], model=model))
         if feedback_frac > 0 and rng.random() < feedback_frac:
             j = rng.integers(0, len(fb_x))
-            service.feedback(fb_x[j], int(fb_y[j]))
+            service.feedback(fb_x[j], int(fb_y[j]), model=model)
     results = [service.result(rid, timeout=timeout_s) for rid in ids]
     wall = time.perf_counter() - t0
     return LoadReport(results=results, labels=y_pool[picks].astype(np.int64),
                       wall_s=wall, offered_rate_hz=rate_hz)
+
+
+def run_multi_open_loop(
+    service: BCPNNService,
+    streams: Mapping[str, StreamSpec],
+    n_requests: int,
+    seed: int = 0,
+    timeout_s: float = 120.0,
+) -> Dict[str, LoadReport]:
+    """One merged open-loop arrival process over several models.
+
+    ``n_requests`` total arrivals are generated from the superposed
+    Poisson process (combined rate = sum of per-stream rates); each
+    arrival is assigned to model ``m`` with probability
+    ``rate_m / rate_total`` — the exact decomposition of independent
+    Poisson streams, so each model sees Poisson arrivals at its own rate
+    while the engine sees the true interleaved mix.  Returns one
+    ``LoadReport`` per model.
+    """
+    names = list(streams)
+    if not names:
+        raise ValueError("run_multi_open_loop needs at least one stream")
+    rates = np.asarray([streams[n].rate_hz for n in names], np.float64)
+    if (rates <= 0).any():
+        raise ValueError(f"every stream needs rate_hz > 0 (got {rates})")
+    total = float(rates.sum())
+    rng = np.random.default_rng(seed)
+    owners = rng.choice(len(names), size=n_requests, p=rates / total)
+    waits = rng.exponential(1.0 / total, size=n_requests)
+    ids: Dict[str, List[int]] = {n: [] for n in names}
+    labels: Dict[str, List[int]] = {n: [] for n in names}
+    t0 = time.perf_counter()
+    next_t = t0
+    for k in range(n_requests):
+        name = names[int(owners[k])]
+        s = streams[name]
+        next_t += waits[k]
+        delay = next_t - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        i = rng.integers(0, len(s.x_pool))
+        ids[name].append(service.submit(s.x_pool[i], model=name))
+        labels[name].append(int(s.y_pool[i]))
+        if s.feedback_frac > 0 and rng.random() < s.feedback_frac:
+            fb_x = s.x_pool if s.fb_x is None else s.fb_x
+            fb_y = s.y_pool if s.fb_y is None else s.fb_y
+            j = rng.integers(0, len(fb_x))
+            service.feedback(fb_x[j], int(fb_y[j]), model=name)
+    results = {name: [service.result(rid, timeout=timeout_s)
+                      for rid in ids[name]] for name in names}
+    wall = time.perf_counter() - t0  # one clock for every stream's report
+    return {name: LoadReport(
+        results=results[name],
+        labels=np.asarray(labels[name], np.int64),
+        wall_s=wall,
+        offered_rate_hz=float(streams[name].rate_hz)) for name in names}

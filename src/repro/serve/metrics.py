@@ -6,23 +6,43 @@ learn steps — so every mutation takes the lock.  Latencies are kept in a
 bounded ring (last ``window`` requests); percentiles are computed on
 demand from that ring, which is the usual serving-telemetry trade-off
 (exact recent-window percentiles, O(window) memory).
+
+Two more bounded windows feed the engine's adaptive bucket selection
+(DESIGN.md §6): recent arrival timestamps (``arrival_rate_hz``) and
+recent microbatch group sizes (``group_p90``).  Every record method takes
+an optional explicit ``now`` so tests can drive a deterministic clock.
+
+In a multi-model engine each model owns one ``ServeMetrics``;
+``ServeMetrics.aggregate`` merges a set of them into one engine-wide
+snapshot (counters summed, percentiles over the concatenated latency
+rings).
 """
 from __future__ import annotations
 
 import collections
 import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 import numpy as np
 
 
-class ServeMetrics:
-    """Thread-safe aggregate metrics for one serving engine."""
+def _percentile_keys(lat: np.ndarray) -> Dict[str, float]:
+    out = {}
+    for name, q in (("p50_ms", 50), ("p90_ms", 90), ("p99_ms", 99)):
+        out[name] = float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
+    out["mean_ms"] = float(lat.mean() * 1e3) if lat.size else 0.0
+    return out
 
-    def __init__(self, window: int = 4096):
+
+class ServeMetrics:
+    """Thread-safe aggregate metrics for one served model."""
+
+    def __init__(self, window: int = 4096, rate_window: int = 256):
         self._lock = threading.Lock()
         self._lat_s = collections.deque(maxlen=window)
+        self._arrivals = collections.deque(maxlen=rate_window)
+        self._groups = collections.deque(maxlen=rate_window)
         self.submitted = 0
         self.completed = 0
         self.batches = 0
@@ -34,28 +54,55 @@ class ServeMetrics:
         self._t_last: Optional[float] = None
 
     # ------------------------------------------------------------ record --
-    def record_submit(self, n: int = 1) -> None:
+    def record_submit(self, n: int = 1, now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
         with self._lock:
             self.submitted += n
+            self._arrivals.append(now)
             if self._t_start is None:
-                self._t_start = time.perf_counter()
+                self._t_start = now
 
     def record_batch(self, n_valid: int, bucket: int) -> None:
         with self._lock:
             self.batches += 1
             self.occupied_slots += n_valid
             self.padded_slots += bucket - n_valid
+            self._groups.append(n_valid)
 
-    def record_complete(self, latency_s: float) -> None:
+    def record_complete(self, latency_s: float,
+                        now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
         with self._lock:
             self.completed += 1
             self._lat_s.append(latency_s)
-            self._t_last = time.perf_counter()
+            self._t_last = now
 
     def record_learn(self, n_samples: int) -> None:
         with self._lock:
             self.learn_steps += 1
             self.learn_samples += n_samples
+
+    # ------------------------------------------------- adaptive windows --
+    def arrival_rate_hz(self) -> float:
+        """Observed arrival rate over the recent-arrival window (0 until
+        two arrivals have landed)."""
+        with self._lock:
+            if len(self._arrivals) < 2:
+                return 0.0
+            span = self._arrivals[-1] - self._arrivals[0]
+            if span <= 0:
+                return 0.0
+            return (len(self._arrivals) - 1) / span
+
+    def group_p90(self) -> float:
+        """90th-percentile genuine-group size over recent microbatches
+        (0 until a batch has run) — the occupancy window the adaptive
+        bucket policy uses to keep a backlog-sized bucket active."""
+        with self._lock:
+            if not self._groups:
+                return 0.0
+            return float(np.percentile(np.asarray(self._groups, np.float64),
+                                       90))
 
     # ---------------------------------------------------------- snapshot --
     def snapshot(self, queue_depth: int = 0) -> Dict[str, float]:
@@ -79,7 +126,43 @@ class ServeMetrics:
                 "images_per_s": (self.completed / elapsed
                                  if elapsed > 0 else 0.0),
             }
-        for name, q in (("p50_ms", 50), ("p90_ms", 90), ("p99_ms", 99)):
-            out[name] = float(np.percentile(lat, q) * 1e3) if lat.size else 0.0
-        out["mean_ms"] = float(lat.mean() * 1e3) if lat.size else 0.0
+        out["arrival_rate_hz"] = self.arrival_rate_hz()
+        out.update(_percentile_keys(lat))
+        return out
+
+    @staticmethod
+    def aggregate(metrics: Iterable["ServeMetrics"],
+                  queue_depth: int = 0) -> Dict[str, float]:
+        """One engine-wide snapshot over per-model registries: counters
+        summed, occupancy over pooled slots, throughput over the earliest
+        start / latest completion, percentiles over the concatenated
+        latency rings."""
+        ms = list(metrics)
+        lats, t0s, t1s = [], [], []
+        out = {"submitted": 0.0, "completed": 0.0, "batches": 0.0,
+               "learn_steps": 0.0, "learn_samples": 0.0}
+        occupied = padded = 0
+        for m in ms:
+            with m._lock:
+                lats.append(np.asarray(m._lat_s, np.float64))
+                out["submitted"] += m.submitted
+                out["completed"] += m.completed
+                out["batches"] += m.batches
+                out["learn_steps"] += m.learn_steps
+                out["learn_samples"] += m.learn_samples
+                occupied += m.occupied_slots
+                padded += m.padded_slots
+                if m._t_start is not None:
+                    t0s.append(m._t_start)
+                if m._t_last is not None:
+                    t1s.append(m._t_last)
+        lat = np.concatenate(lats) if lats else np.zeros((0,))
+        slots = occupied + padded
+        elapsed = (max(t1s) - min(t0s)) if t0s and t1s else 0.0
+        out["queue_depth"] = float(queue_depth)
+        out["batch_occupancy"] = occupied / slots if slots else 0.0
+        out["images_per_s"] = (out["completed"] / elapsed
+                               if elapsed > 0 else 0.0)
+        out["arrival_rate_hz"] = sum(m.arrival_rate_hz() for m in ms)
+        out.update(_percentile_keys(lat))
         return out

@@ -301,3 +301,28 @@ def test_serving_engine_rejects_drifted_table():
         projs=(dataclasses.replace(state.projs[0], table=bad_table),))
     with pytest.raises(ValueError, match="disagrees with the mask"):
         BCPNNService(bad, spec, max_batch=8)
+
+
+def test_serving_engine_rejects_duplicate_table_entries():
+    """A table row with a DUPLICATED pre-HC index (paired with an
+    under-full mask column, so the scattered mask could spuriously
+    match) must also be refused — it would gather the same pre block
+    twice."""
+    from repro.core.network import init_deep, make_network_spec
+    from repro.serve import BCPNNService
+
+    spec = make_network_spec(LayerGeom(10, 2), [(4, 8)], n_classes=3,
+                             nact=[3], backend="pallas",
+                             patchy_traces=True, compact=True)
+    state = init_deep(spec, jax.random.PRNGKey(0))
+    table = np.asarray(state.projs[0].table).copy()
+    mask = np.asarray(state.projs[0].mask).copy()
+    mask[table[0, 1], 0] = 0.0       # drop one live pre-HC from column 0
+    table[0, 1] = table[0, 0]        # duplicate another in its place
+    bad = dataclasses.replace(
+        state,
+        projs=(dataclasses.replace(state.projs[0],
+                                   table=jnp.asarray(table),
+                                   mask=jnp.asarray(mask)),))
+    with pytest.raises(ValueError, match="disagrees with the mask"):
+        BCPNNService(bad, spec, max_batch=8)

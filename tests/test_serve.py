@@ -1,6 +1,8 @@
 """Serving-engine tests: bucketed microbatching, padded-batch parity with
 direct inference, async submit/result, online learning from the feedback
-stream, and the padded-evaluation / masked-infer mechanics it rides on."""
+stream, multi-model routing/fairness/adaptive buckets, bit-exact
+served-learning parity (incl. in-deployment rewire), and the
+padded-evaluation / masked-infer mechanics it rides on."""
 import dataclasses
 import threading
 import time
@@ -10,15 +12,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, load_model, load_models
 from repro.configs.bcpnn_models import deep_synth_spec
 from repro.core import (
-    Trainer, infer, init_deep, init_projection, spec_from_dict, spec_to_dict,
+    Trainer, infer, init_deep, init_projection, online_learn_step,
+    spec_from_dict, spec_to_dict, supervised_readout_step,
+)
+from repro.serve import (
+    BCPNNService, ServeMetrics, StreamSpec, cycle_batch, default_buckets,
+    pad_group, pick_bucket, run_multi_open_loop, run_open_loop,
 )
 from repro.data.synthetic import encode_images, make_synthetic
-from repro.serve import (
-    BCPNNService, default_buckets, pad_group, pick_bucket, run_open_loop,
-)
 
 
 def _small_net(depth=1, backend="jnp", seed=0, side=6, n_classes=3):
@@ -245,3 +249,461 @@ def test_spec_roundtrip_and_checkpoint_extra(tmp_path):
     assert mgr.read_extra(3) is not None
     mgr.save(4, state, blocking=True)
     assert mgr.read_extra(4) is None
+
+
+# ------------------------------------------------- multi-model routing ----
+
+def test_multi_model_routing_matches_each_direct_infer():
+    """Two models with DIFFERENT geometries behind one admission front:
+    every request routes to its own model's compiled buckets and matches
+    that model's direct infer; results carry the model name."""
+    spec_a, state_a = _small_net(depth=1, seed=0, side=6, n_classes=3)
+    spec_b, state_b = _small_net(depth=2, seed=1, side=5, n_classes=4)
+    xa = np.asarray(jax.random.uniform(jax.random.PRNGKey(2),
+                                       (6, spec_a.input_geom.N)))
+    xb = np.asarray(jax.random.uniform(jax.random.PRNGKey(3),
+                                       (6, spec_b.input_geom.N)))
+    svc = BCPNNService.multi({"a": (state_a, spec_a),
+                              "b": (state_b, spec_b)}, max_batch=4).start()
+    try:
+        assert svc.models() == ("a", "b")
+        ids_a = [svc.submit(x, model="a") for x in xa]
+        ids_b = [svc.submit(x, model="b") for x in xb]
+        got_a = [svc.result(i, timeout=30) for i in ids_a]
+        got_b = [svc.result(i, timeout=30) for i in ids_b]
+        one = svc.classify(xb[0], timeout=30, model="b")
+    finally:
+        svc.stop()
+    pa, ra = infer(state_a, spec_a, jnp.asarray(xa))
+    pb, rb = infer(state_b, spec_b, jnp.asarray(xb))
+    for i, r in enumerate(got_a):
+        assert r.model == "a" and r.pred == int(ra[i])
+        np.testing.assert_allclose(r.probs, np.asarray(pa)[i], atol=1e-5)
+    for i, r in enumerate(got_b):
+        assert r.model == "b" and r.pred == int(rb[i])
+        np.testing.assert_allclose(r.probs, np.asarray(pb)[i], atol=1e-5)
+    assert one.pred == int(rb[0])
+
+
+def test_multi_model_requires_and_validates_model_names():
+    spec, state = _small_net()
+    svc = BCPNNService.multi({"a": (state, spec), "b": (state, spec)},
+                             max_batch=4, online_learning=True)
+    x = np.zeros((spec.input_geom.N,), np.float32)
+    with pytest.raises(ValueError, match="pass model="):
+        svc.submit(x)
+    with pytest.raises(KeyError, match="unknown model"):
+        svc.submit(x, model="nope")
+    with pytest.raises(KeyError, match="unknown model"):
+        svc.feedback(x, 0, model="nope")
+    with pytest.raises(ValueError, match="pass model"):
+        _ = svc.state
+    # single-model services keep the no-name convenience
+    svc1 = BCPNNService(state, spec, max_batch=4)
+    assert svc1.model_state() is state
+    assert svc1.spec == spec
+
+
+def test_model_registration_rules():
+    spec, state = _small_net()
+    with pytest.raises(ValueError, match="at least one"):
+        BCPNNService.multi({})
+    svc = BCPNNService(state, spec, max_batch=4, name="a")
+    with pytest.raises(ValueError, match="already registered"):
+        svc.add_model("a", state, spec)
+    svc.start()
+    try:
+        with pytest.raises(RuntimeError, match="running"):
+            svc.add_model("late", state, spec)
+    finally:
+        svc.stop()
+
+
+def test_per_model_metrics_and_aggregate_snapshot():
+    spec_a, state_a = _small_net(seed=0)
+    spec_b, state_b = _small_net(seed=1)
+    svc = BCPNNService.multi({"a": (state_a, spec_a),
+                              "b": (state_b, spec_b)}, max_batch=4).start()
+    x = np.ones((spec_a.input_geom.N,), np.float32)
+    try:
+        ids = [svc.submit(x, model="a") for _ in range(7)]
+        ids += [svc.submit(x, model="b") for _ in range(3)]
+        for rid in ids:
+            svc.result(rid, timeout=30)
+    finally:
+        svc.stop()
+    snap = svc.snapshot()
+    assert snap["completed"] == snap["submitted"] == 10
+    assert snap["per_model"]["a"]["completed"] == 7
+    assert snap["per_model"]["b"]["completed"] == 3
+    assert svc.snapshot(model="a")["submitted"] == 7
+    assert 0 < snap["p50_ms"] <= snap["p99_ms"]
+    for name in ("a", "b"):
+        per = snap["per_model"][name]
+        assert 0 < per["batch_occupancy"] <= 1
+        assert per["target_bucket"] >= 1
+
+
+def test_round_robin_scheduler_never_starves_minority():
+    """Deterministic scheduler-level fairness: with a 12-vs-2 backlog the
+    minority model's group is scheduled within the first two picks, not
+    behind the majority's whole backlog (what a shared FIFO would do)."""
+    from repro.serve import Request
+
+    spec, state = _small_net()
+    svc = BCPNNService.multi({"a": (state, spec), "b": (state, spec)},
+                             max_batch=4, max_wait_ms=0.0, poll_ms=1.0)
+    x = np.zeros((spec.input_geom.N,), np.float32)
+    for i in range(12):
+        svc._slots["a"].batcher.put(Request(id=i, x=x, enqueue_t=0.0,
+                                            model="a"))
+    for i in range(2):
+        svc._slots["b"].batcher.put(Request(id=100 + i, x=x, enqueue_t=0.0,
+                                            model="b"))
+    order = []
+    while True:
+        group, slot = svc._next_work()
+        if not group:
+            break
+        order.append((slot.name, len(group)))
+    names = [n for n, _ in order]
+    assert names.index("b") <= 1, names
+    assert sum(k for n, k in order if n == "a") == 12
+    assert sum(k for n, k in order if n == "b") == 2
+
+
+def test_fairness_under_skewed_load_fast():
+    """10:1 skewed Poisson mix through a live engine: the minority model
+    completes everything, promptly (small smoke-scale sibling of the
+    slow soak in test_serve_soak.py)."""
+    spec_a, state_a = _small_net(seed=0)
+    spec_b, state_b = _small_net(seed=1)
+    xe = np.asarray(jax.random.uniform(jax.random.PRNGKey(5),
+                                       (32, spec_a.input_geom.N)))
+    ye = np.zeros((32,), np.int64)
+    svc = BCPNNService.multi({"major": (state_a, spec_a),
+                              "minor": (state_b, spec_b)},
+                             max_batch=8, max_wait_ms=2.0).start()
+    try:
+        reports = run_multi_open_loop(
+            svc,
+            {"major": StreamSpec(xe, ye, rate_hz=400.0),
+             "minor": StreamSpec(xe, ye, rate_hz=40.0)},
+            n_requests=120, seed=0)
+    finally:
+        svc.stop()
+    snap = svc.snapshot()
+    assert snap["completed"] == snap["submitted"] == 120
+    n_minor = len(reports["minor"].results)
+    assert n_minor > 0
+    assert snap["per_model"]["minor"]["completed"] == n_minor
+    assert reports["minor"].max_latency_ms < 5000.0
+
+
+def test_run_multi_open_loop_validates_streams():
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=4)
+    with pytest.raises(ValueError, match="at least one"):
+        run_multi_open_loop(svc, {}, n_requests=1)
+    with pytest.raises(ValueError, match="rate_hz > 0"):
+        run_multi_open_loop(
+            svc, {"a": StreamSpec(np.zeros((1, 4)), np.zeros(1),
+                                  rate_hz=0.0)}, n_requests=1)
+
+
+# ------------------------------------------------- adaptive buckets ------
+
+def test_adaptive_target_bucket_tracks_arrival_rate():
+    """The active bucket follows the observed windows: no history -> the
+    smallest bucket (don't dawdle), moderate rate -> a matching middle
+    bucket, saturation or a large recent group -> the largest."""
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=16, max_wait_ms=10.0,
+                       poll_ms=10.0)
+    slot = svc._slots["default"]
+    svc._adapt(slot)
+    assert slot.target_bucket == 1          # no arrivals observed yet
+    assert svc.active_buckets() == (1,)
+    for k in range(64):                     # ~100 Hz arrival window
+        slot.metrics.record_submit(now=k * 0.01)
+    svc._adapt(slot)
+    # 100 Hz * 20 ms window * 1.5 headroom = 3 -> bucket 4
+    assert slot.target_bucket == 4
+    assert svc.active_buckets() == (1, 2, 4)
+    burst = ServeMetrics()
+    for k in range(64):                     # saturating ~100 kHz burst
+        burst.record_submit(now=k * 1e-5)
+    slot.metrics = burst
+    svc._adapt(slot)
+    assert slot.target_bucket == 16
+    # occupancy floor: a rate lull must not shrink below recent groups
+    slow = ServeMetrics()
+    for k in range(8):
+        slow.record_submit(now=k * 1.0)     # 1 Hz
+        slow.record_batch(n_valid=8, bucket=8)
+    slot.metrics = slow
+    svc._adapt(slot)
+    assert slot.target_bucket == 8
+
+
+def test_adaptive_buckets_can_be_disabled():
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=16, adaptive_buckets=False)
+    slot = svc._slots["default"]
+    svc._adapt(slot)
+    assert slot.target_bucket == 16
+    assert svc.active_buckets() == (1, 2, 4, 8, 16)
+
+
+def test_adaptive_serving_still_completes_bursts():
+    """End-to-end with adaptation on (the default): a cold burst larger
+    than the startup target bucket is still served completely and
+    correctly (backlog overrides the cap)."""
+    spec, state = _small_net()
+    xs = np.asarray(jax.random.uniform(jax.random.PRNGKey(4),
+                                       (24, spec.input_geom.N)))
+    svc = BCPNNService(state, spec, max_batch=8).start()
+    try:
+        ids = [svc.submit(x) for x in xs]
+        got = [svc.result(i, timeout=30) for i in ids]
+    finally:
+        svc.stop()
+    _, ref = infer(state, spec, jnp.asarray(xs))
+    assert [r.pred for r in got] == [int(p) for p in np.asarray(ref)]
+    snap = svc.snapshot()
+    assert snap["completed"] == 24
+
+
+# ------------------------------------- served-learning parity (bitwise) --
+
+def _feedback_stream(spec, n, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.random((n, spec.input_geom.N)).astype(np.float32)
+    ys = rng.integers(0, spec.n_classes, size=n).astype(np.int32)
+    return xs, ys
+
+
+def _replay_offline(state, spec, xs, ys, batch, learn_stack):
+    """Offline reference: the same jitted learn program the engine runs,
+    applied to the same feedback stream in the same batch compositions
+    (full batches, then one cycled tail — feedback_eager=False)."""
+    if learn_stack:
+        fn = jax.jit(lambda st, x, y: online_learn_step(
+            st, spec, x, y, learn_stack=True))
+    else:
+        fn = jax.jit(lambda st, x, y: supervised_readout_step(
+            st, spec, x, y))
+    ref = state
+    items = list(zip(xs, ys))
+    while items:
+        chunk, items = items[:batch], items[batch:]
+        x, y = cycle_batch(chunk, batch)
+        ref = fn(ref, jnp.asarray(x), jnp.asarray(y))
+    return ref
+
+
+def _assert_states_bitwise_equal(got, want):
+    for (ka, a), (kb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(got)[0],
+            jax.tree_util.tree_flatten_with_path(want)[0]):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"leaf {jax.tree_util.keystr(ka)} diverged")
+
+
+def test_readout_online_learning_parity_bitwise():
+    """Served readout-only learning == offline supervised_readout_step
+    replay, bit for bit."""
+    spec, state = _small_net(depth=1)
+    xs, ys = _feedback_stream(spec, 24, seed=1)
+    svc = BCPNNService(state, spec, max_batch=4, online_learning=True,
+                       feedback_batch=8, feedback_eager=False).start()
+    for x, y in zip(xs, ys):
+        svc.feedback(x, int(y))
+    svc.stop()
+    ref = _replay_offline(state, spec, xs, ys, 8, learn_stack=False)
+    _assert_states_bitwise_equal(svc.state, ref)
+
+
+def test_stack_online_learning_parity_dense_bitwise():
+    """Served stack+readout learning (learn_stack=True) on a dense
+    depth-2 network == offline online_learn_step replay, bit for bit —
+    including a cycled short tail batch."""
+    spec, state = _small_net(depth=2)
+    xs, ys = _feedback_stream(spec, 21, seed=2)  # 2 full batches + tail 5
+    svc = BCPNNService(state, spec, max_batch=4, online_learning=True,
+                       learn_stack=True, feedback_batch=8,
+                       feedback_eager=False).start()
+    for x, y in zip(xs, ys):
+        svc.feedback(x, int(y))
+    svc.stop()
+    ref = _replay_offline(state, spec, xs, ys, 8, learn_stack=True)
+    _assert_states_bitwise_equal(svc.state, ref)
+    # the stack actually learned (not a frozen-stack false positive)
+    assert int(svc.state.projs[0].traces.t) == 3
+    assert not np.array_equal(np.asarray(svc.state.projs[0].w),
+                              np.asarray(state.projs[0].w))
+
+
+@pytest.mark.parametrize("compact", [False, True],
+                         ids=["patchy-held", "compact"])
+def test_stack_online_learning_parity_with_rewire_bitwise(compact):
+    """The acceptance bar: a multi-model engine run with stack learning
+    AND triggered struct_every rewires matches the offline replay bit
+    for bit, for a dense model and a patchy model (dense-resident held
+    traces / compact-resident) served side by side."""
+    spec_d, state_d = _small_net(depth=1, seed=3)
+    spec_p = deep_synth_spec(side=6, depth=1, n_classes=3, hidden_hc=4,
+                             hidden_mc=8, nact=[9], patchy_traces=True,
+                             compact=compact, struct_every=2)
+    state_p = init_deep(spec_p, jax.random.PRNGKey(4))
+    fb = 8
+    xs_d, ys_d = _feedback_stream(spec_d, 2 * fb, seed=5)
+    xs_p, ys_p = _feedback_stream(spec_p, 3 * fb, seed=6)  # t crosses 2
+    svc = BCPNNService.multi(
+        {"dense": (state_d, spec_d), "patchy": (state_p, spec_p)},
+        max_batch=4, online_learning=True, learn_stack=True,
+        feedback_batch=fb, feedback_eager=False).start()
+    # interleave the two models' label streams through the shared front
+    for i in range(max(len(xs_d), len(xs_p))):
+        if i < len(xs_d):
+            svc.feedback(xs_d[i], int(ys_d[i]), model="dense")
+        if i < len(xs_p):
+            svc.feedback(xs_p[i], int(ys_p[i]), model="patchy")
+    svc.stop()
+    svc.revalidate()  # mask/table invariants survived the served rewires
+    got_p = svc.model_state("patchy")
+    assert int(got_p.projs[0].traces.t) == 3  # crossed the t=2 boundary
+    ref_d = _replay_offline(state_d, spec_d, xs_d, ys_d, fb,
+                            learn_stack=True)
+    ref_p = _replay_offline(state_p, spec_p, xs_p, ys_p, fb,
+                            learn_stack=True)
+    _assert_states_bitwise_equal(svc.model_state("dense"), ref_d)
+    _assert_states_bitwise_equal(got_p, ref_p)
+    if compact:
+        assert got_p.projs[0].table is not None
+        assert got_p.projs[0].traces.pij.ndim == 3
+
+
+def test_cycle_batch_composition():
+    items = [(np.full((2,), i, np.float32), i) for i in range(3)]
+    x, y = cycle_batch(items, 8)
+    assert x.shape == (8, 2) and y.shape == (8,)
+    np.testing.assert_array_equal(y, [0, 1, 2, 0, 1, 2, 0, 1])
+    np.testing.assert_array_equal(x[:, 0], y.astype(np.float32))
+
+
+# ------------------------------------------- concurrency + retention ------
+
+def test_concurrency_stress_no_lost_or_double_completed_ids():
+    """N producers + a feedback client + a metrics poller hammering a
+    live engine with a racing stop: every admitted id resolves exactly
+    once, none double-complete, counters reconcile."""
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=8, max_wait_ms=0.5,
+                       online_learning=True, feedback_batch=4,
+                       result_retention=1 << 20).start()
+    x = np.ones((spec.input_geom.N,), np.float32)
+    ids = [[] for _ in range(4)]
+    errs = []
+    done = threading.Event()
+
+    def producer(k):
+        while not done.is_set():
+            try:
+                ids[k].append(svc.submit(x))
+            except RuntimeError:
+                return
+
+    def fb_client():
+        while not done.is_set():
+            try:
+                svc.feedback(x, 1)
+            except RuntimeError:
+                return
+            time.sleep(0.001)
+
+    def poller():
+        while not done.is_set():
+            try:
+                snap = svc.snapshot()
+                if snap["completed"] > snap["submitted"]:
+                    errs.append(snap)
+            except Exception as e:  # pragma: no cover - should not happen
+                errs.append(e)
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=producer, args=(k,))
+               for k in range(4)]
+    threads += [threading.Thread(target=fb_client),
+                threading.Thread(target=poller)]
+    for t in threads:
+        t.start()
+    time.sleep(0.15)
+    svc.stop()          # races the producers' submits
+    done.set()
+    for t in threads:
+        t.join()
+    all_ids = [rid for sub in ids for rid in sub]
+    assert len(all_ids) == len(set(all_ids)), "duplicate request ids"
+    results = [svc.result(rid, timeout=10) for rid in all_ids]
+    assert sorted(r.request_id for r in results) == sorted(all_ids)
+    assert all(r.pred >= 0 for r in results)
+    assert len(svc._requests) == 0, "registry not drained"
+    assert not errs, errs
+    snap = svc.snapshot()
+    assert snap["completed"] == snap["submitted"] == len(all_ids)
+
+
+def test_result_retention_evicts_oldest_uncollected():
+    """Fire-and-forget submitters cannot grow the registry: only the most
+    recent ``result_retention`` completed-but-uncollected results stay
+    collectable; older ids are forgotten."""
+    spec, state = _small_net()
+    svc = BCPNNService(state, spec, max_batch=4, result_retention=8).start()
+    x = np.ones((spec.input_geom.N,), np.float32)
+    ids = [svc.submit(x) for _ in range(30)]
+    svc.stop()  # drains: everything completed
+    assert len(svc._requests) <= 8
+    for rid in ids[-4:]:        # newest still collectable
+        assert svc.result(rid, timeout=5).pred >= 0
+    with pytest.raises(KeyError):
+        svc.result(ids[0], timeout=5)
+
+
+# ------------------------------------------------- multi-model loading ----
+
+def test_load_model_from_checkpoint_dir_alone(tmp_path):
+    spec = deep_synth_spec(side=6, depth=1, n_classes=3, hidden_hc=4,
+                           hidden_mc=8)
+    tr = Trainer(spec, seed=0)
+    d = str(tmp_path / "m0")
+    tr.save(d)
+    state, spec2, step = load_model(d)
+    assert spec2 == spec
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(tr.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(FileNotFoundError):
+        load_model(str(tmp_path / "missing"))
+    # spec-less manifests are refused, not silently misloaded
+    bare = str(tmp_path / "bare")
+    CheckpointManager(bare).save(1, tr.state, blocking=True)
+    with pytest.raises(ValueError, match="no spec metadata"):
+        load_model(bare)
+
+
+def test_load_models_names_and_dedup(tmp_path):
+    spec = deep_synth_spec(side=6, depth=1, n_classes=3, hidden_hc=4,
+                           hidden_mc=8)
+    tr = Trainer(spec, seed=0)
+    d = str(tmp_path / "modelA")
+    tr.save(d)
+    models = load_models([d, d])
+    assert set(models) == {"modelA", "modelA#2"}
+    svc = BCPNNService.multi(models, max_batch=4).start()
+    try:
+        r = svc.classify(np.zeros((spec.input_geom.N,), np.float32),
+                         timeout=30, model="modelA#2")
+        assert r.model == "modelA#2"
+    finally:
+        svc.stop()

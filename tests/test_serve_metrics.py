@@ -1,0 +1,147 @@
+"""Deterministic ServeMetrics unit tests: percentiles on hand-built
+latency sequences, ring eviction at ``metrics_window``, occupancy math on
+partially-valid batches, the adaptive-policy windows (arrival rate, group
+p90) on injected clocks, and multi-model aggregation — previously these
+were only exercised incidentally through the engine."""
+import numpy as np
+import pytest
+
+from repro.serve import ServeMetrics
+
+
+def test_percentiles_on_hand_built_sequence():
+    m = ServeMetrics(window=128)
+    lats = [0.010, 0.020, 0.030, 0.040, 0.100]  # seconds
+    for l in lats:
+        m.record_complete(l)
+    snap = m.snapshot()
+    ref = np.asarray(lats) * 1e3
+    assert snap["p50_ms"] == pytest.approx(np.percentile(ref, 50))
+    assert snap["p90_ms"] == pytest.approx(np.percentile(ref, 90))
+    assert snap["p99_ms"] == pytest.approx(np.percentile(ref, 99))
+    assert snap["mean_ms"] == pytest.approx(ref.mean())
+    assert snap["completed"] == 5.0
+
+
+def test_percentiles_ordering_invariant():
+    m = ServeMetrics()
+    for l in (0.5, 0.001, 0.25, 0.003, 0.9, 0.004):
+        m.record_complete(l)
+    snap = m.snapshot()
+    assert snap["p50_ms"] <= snap["p90_ms"] <= snap["p99_ms"]
+    assert snap["p99_ms"] <= 900.0 + 1e-9
+
+
+def test_latency_window_eviction():
+    """The ring keeps exactly the last ``window`` latencies: older ones
+    stop influencing the percentiles."""
+    m = ServeMetrics(window=8)
+    for _ in range(5):
+        m.record_complete(10.0)  # absurd 10s outliers, soon evicted
+    for _ in range(8):
+        m.record_complete(0.010)
+    snap = m.snapshot()
+    assert snap["p99_ms"] == pytest.approx(10.0)   # ms — outliers gone
+    assert snap["mean_ms"] == pytest.approx(10.0)
+    assert snap["completed"] == 13.0  # counters are lifetime, not windowed
+
+
+def test_occupancy_partially_valid_batches():
+    m = ServeMetrics()
+    m.record_batch(n_valid=3, bucket=4)
+    m.record_batch(n_valid=1, bucket=4)
+    snap = m.snapshot()
+    assert snap["batches"] == 2.0
+    assert snap["batch_occupancy"] == pytest.approx(4 / 8)
+    m.record_batch(n_valid=8, bucket=8)
+    assert m.snapshot()["batch_occupancy"] == pytest.approx(12 / 16)
+
+
+def test_occupancy_empty_is_zero_not_nan():
+    snap = ServeMetrics().snapshot()
+    assert snap["batch_occupancy"] == 0.0
+    assert snap["p50_ms"] == snap["p99_ms"] == snap["mean_ms"] == 0.0
+    assert snap["images_per_s"] == 0.0
+    assert snap["arrival_rate_hz"] == 0.0
+
+
+def test_arrival_rate_from_injected_clock():
+    m = ServeMetrics()
+    assert m.arrival_rate_hz() == 0.0
+    m.record_submit(now=0.0)
+    assert m.arrival_rate_hz() == 0.0  # one arrival: no rate yet
+    for t in (0.1, 0.2, 0.3, 0.4):
+        m.record_submit(now=t)
+    assert m.arrival_rate_hz() == pytest.approx(10.0)  # 4 gaps / 0.4 s
+    assert m.snapshot()["arrival_rate_hz"] == pytest.approx(10.0)
+
+
+def test_arrival_rate_windowed():
+    """The rate reflects the RECENT window, not lifetime: a long-ago
+    burst falls out of the bounded arrival deque."""
+    m = ServeMetrics(rate_window=4)
+    for t in (0.0, 0.001, 0.002, 0.003):   # 1000 Hz burst
+        m.record_submit(now=t)
+    for t in (10.0, 11.0, 12.0, 13.0):     # then 1 Hz trickle
+        m.record_submit(now=t)
+    assert m.arrival_rate_hz() == pytest.approx(1.0)
+
+
+def test_group_p90_window():
+    m = ServeMetrics()
+    assert m.group_p90() == 0.0
+    for n in (1, 1, 1, 1, 1, 1, 1, 1, 1, 8):
+        m.record_batch(n_valid=n, bucket=8)
+    assert m.group_p90() == pytest.approx(
+        np.percentile([1] * 9 + [8], 90))
+
+
+def test_throughput_on_injected_clock():
+    m = ServeMetrics()
+    m.record_submit(now=100.0)
+    for i in range(20):
+        m.record_complete(0.005, now=100.0 + (i + 1) * 0.5)
+    snap = m.snapshot()
+    assert snap["images_per_s"] == pytest.approx(20 / 10.0)
+
+
+def test_learn_counters():
+    m = ServeMetrics()
+    m.record_learn(16)
+    m.record_learn(3)
+    snap = m.snapshot()
+    assert snap["learn_steps"] == 2.0
+    assert snap["learn_samples"] == 19.0
+
+
+def test_aggregate_across_models():
+    """Engine-wide aggregation: counters sum, occupancy pools slots,
+    percentiles cover the concatenated rings, throughput spans the
+    earliest start to the latest completion."""
+    a, b = ServeMetrics(), ServeMetrics()
+    a.record_submit(now=0.0)
+    b.record_submit(now=1.0)
+    a.record_batch(n_valid=2, bucket=4)
+    b.record_batch(n_valid=4, bucket=4)
+    for l in (0.010, 0.020):
+        a.record_complete(l, now=2.0)
+    for l in (0.030, 0.040):
+        b.record_complete(l, now=4.0)
+    a.record_learn(8)
+    agg = ServeMetrics.aggregate([a, b], queue_depth=3)
+    assert agg["submitted"] == 2.0 and agg["completed"] == 4.0
+    assert agg["batches"] == 2.0
+    assert agg["batch_occupancy"] == pytest.approx(6 / 8)
+    assert agg["learn_steps"] == 1.0 and agg["learn_samples"] == 8.0
+    assert agg["queue_depth"] == 3.0
+    assert agg["images_per_s"] == pytest.approx(4 / 4.0)  # span 0 -> 4 s
+    ref = np.asarray([10.0, 20.0, 30.0, 40.0])
+    assert agg["p50_ms"] == pytest.approx(np.percentile(ref, 50))
+    assert agg["p99_ms"] == pytest.approx(np.percentile(ref, 99))
+
+
+def test_aggregate_of_empty_registries():
+    agg = ServeMetrics.aggregate([ServeMetrics(), ServeMetrics()])
+    assert agg["completed"] == 0.0
+    assert agg["p99_ms"] == 0.0 and agg["images_per_s"] == 0.0
+    assert agg["batch_occupancy"] == 0.0

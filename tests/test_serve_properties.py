@@ -1,0 +1,104 @@
+"""Hypothesis property tests on the serving batcher's invariants
+(serve/batching.py): bucket admission, minimality, pad masking and
+request-order preservation across adversarial sizes."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests "
+                    "need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
+
+COMMON = dict(deadline=None, max_examples=50)
+
+
+@settings(**COMMON)
+@given(max_batch=st.integers(1, 4096))
+def test_default_buckets_cover_and_terminate(max_batch):
+    """Powers of two strictly below max_batch, then max_batch itself:
+    sorted, unique, 1 admits singles, the top admits a full burst."""
+    buckets = default_buckets(max_batch)
+    assert buckets[0] == 1 and buckets[-1] == max_batch
+    assert list(buckets) == sorted(set(buckets))
+    body = buckets[:-1]
+    assert all(b == 2 ** i for i, b in enumerate(body))
+    assert all(b < max_batch for b in body)
+
+
+@settings(**COMMON)
+@given(max_batch=st.integers(1, 1024), data=st.data())
+def test_pick_bucket_admits_and_is_minimal(max_batch, data):
+    """The picked bucket fits the group AND is the smallest that does —
+    the two invariants padding cost rests on."""
+    buckets = default_buckets(max_batch)
+    n = data.draw(st.integers(1, max_batch))
+    b = pick_bucket(n, buckets)
+    assert b in buckets
+    assert b >= n
+    assert all(other < n for other in buckets if other < b)
+
+
+@settings(**COMMON)
+@given(max_batch=st.integers(1, 256), over=st.integers(1, 64))
+def test_pick_bucket_rejects_oversize(max_batch, over):
+    with pytest.raises(ValueError):
+        pick_bucket(max_batch + over, default_buckets(max_batch))
+
+
+@settings(**COMMON)
+@given(n=st.integers(1, 64), pad_to=st.integers(0, 64),
+       dim=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_pad_group_mask_and_order(n, pad_to, dim, seed):
+    """Rows [0, n) are the samples in submission order; rows [n, bucket)
+    are zero with a 0 validity mask — nothing else."""
+    bucket = n + pad_to
+    rng = np.random.default_rng(seed)
+    xs = [rng.random(dim).astype(np.float32) for _ in range(n)]
+    x, valid = pad_group(xs, bucket)
+    assert x.shape == (bucket, dim) and valid.shape == (bucket,)
+    assert x.dtype == np.float32 and valid.dtype == np.float32
+    np.testing.assert_array_equal(valid[:n], 1.0)
+    np.testing.assert_array_equal(valid[n:], 0.0)
+    for i, xi in enumerate(xs):  # order preserved, values untouched
+        np.testing.assert_array_equal(x[i], xi)
+    np.testing.assert_array_equal(x[n:], 0.0)
+
+
+@settings(**COMMON)
+@given(max_batch=st.integers(1, 64), n=st.integers(1, 128))
+def test_batcher_groups_preserve_fifo_order_and_lose_nothing(max_batch, n):
+    """Draining any queue through next_group yields every request exactly
+    once, in submission order, in groups no larger than max_batch."""
+    mb = MicroBatcher(default_buckets(max_batch), max_wait_s=0.0)
+    for i in range(n):
+        mb.put(Request(id=i, x=np.zeros(1, np.float32), enqueue_t=0.0))
+    seen = []
+    while True:
+        group = mb.next_group(timeout_s=0.0)
+        if not group:
+            break
+        assert 1 <= len(group) <= max_batch
+        seen += [r.id for r in group]
+    assert seen == list(range(n))
+    assert mb.depth() == 0
+
+
+@settings(**COMMON)
+@given(max_batch=st.integers(2, 64), n=st.integers(1, 128),
+       target=st.integers(1, 64))
+def test_batcher_target_cap_never_splits_backlog(max_batch, n, target):
+    """The adaptive target caps how long a group WAITS, never how much
+    already-queued backlog it admits: with everything pre-queued, groups
+    still come out max_batch-bounded FIFO and nothing is lost."""
+    mb = MicroBatcher(default_buckets(max_batch), max_wait_s=0.0)
+    for i in range(n):
+        mb.put(Request(id=i, x=np.zeros(1, np.float32), enqueue_t=0.0))
+    seen = []
+    while True:
+        group = mb.next_group(timeout_s=0.0, target=target)
+        if not group:
+            break
+        assert len(group) <= max_batch
+        seen += [r.id for r in group]
+    assert seen == list(range(n))

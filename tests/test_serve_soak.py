@@ -1,0 +1,88 @@
+"""Slow multi-model soak: an open-loop Poisson mix with a 10:1 per-model
+rate skew through a live engine, asserting fairness (the minority model's
+completion share tracks its arrival share THROUGHOUT the run, not just at
+drain) and no starvation past a latency ceiling."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.bcpnn_models import deep_synth_spec
+from repro.core import init_deep
+from repro.serve import BCPNNService, StreamSpec, run_multi_open_loop
+
+
+@pytest.mark.slow
+def test_skewed_poisson_fairness_soak():
+    spec_a = deep_synth_spec(side=8, depth=2, n_classes=4, hidden_hc=8,
+                             hidden_mc=16)
+    spec_b = deep_synth_spec(side=8, depth=1, n_classes=4, hidden_hc=4,
+                             hidden_mc=8)
+    state_a = init_deep(spec_a, jax.random.PRNGKey(0))
+    state_b = init_deep(spec_b, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(7)
+    xe = rng.random((64, spec_a.input_geom.N)).astype(np.float32)
+    ye = rng.integers(0, 4, size=64).astype(np.int64)
+    svc = BCPNNService.multi({"major": (state_a, spec_a),
+                              "minor": (state_b, spec_b)},
+                             max_batch=16, max_wait_ms=2.0).start()
+
+    # Mid-run sampler: per-model completion counts while load is flowing
+    # (post-drain shares are trivially proportional — the fairness claim
+    # is about DURING the run).
+    samples = []
+    stop_sampling = threading.Event()
+
+    def sampler():
+        while not stop_sampling.is_set():
+            snap = svc.snapshot()
+            samples.append((snap["per_model"]["major"]["completed"],
+                            snap["per_model"]["minor"]["completed"]))
+            time.sleep(0.025)
+
+    st = threading.Thread(target=sampler)
+    st.start()
+    try:
+        reports = run_multi_open_loop(
+            svc,
+            {"major": StreamSpec(xe, ye, rate_hz=500.0),
+             "minor": StreamSpec(xe, ye, rate_hz=50.0)},
+            n_requests=600, seed=3)
+    finally:
+        stop_sampling.set()
+        st.join()
+        svc.stop()
+    snap = svc.snapshot()
+
+    # zero loss, both models served
+    assert snap["completed"] == snap["submitted"] == 600
+    n_major = len(reports["major"].results)
+    n_minor = len(reports["minor"].results)
+    assert n_major + n_minor == 600 and n_minor > 0
+    arrival_share = n_minor / 600.0          # ~1/11 under the 10:1 skew
+
+    # fairness THROUGHOUT: once a meaningful number of requests has
+    # completed, the minority's completion share stays within 2x of its
+    # arrival share (acceptance bar) at every sample
+    checked = 0
+    for c_major, c_minor in samples:
+        total = c_major + c_minor
+        if total < 100 or total >= 590:      # warmup / drained tails
+            continue
+        share = c_minor / total
+        assert share >= arrival_share / 2.0, (
+            f"minority starved mid-run: share {share:.3f} vs arrival "
+            f"share {arrival_share:.3f} at {total:.0f} completed")
+        assert share <= min(1.0, arrival_share * 2.0 + 0.05), (
+            f"minority over-served mid-run: {share:.3f}")
+        checked += 1
+    assert checked > 0, "sampler caught no mid-run window; slow machine?"
+
+    # no starvation past the latency ceiling, for EVERY request
+    for name, rep in reports.items():
+        assert rep.max_latency_ms < 2000.0, (
+            f"model {name!r} request starved: {rep.max_latency_ms:.0f}ms")
+    # and the minority's tail latency is not inflated by the skew
+    assert snap["per_model"]["minor"]["p99_ms"] < 1000.0

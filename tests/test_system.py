@@ -53,19 +53,30 @@ def test_serve_driver_end_to_end():
 @pytest.mark.slow
 def test_serve_bcpnn_driver_end_to_end(tmp_path):
     """The BCPNN serving driver: train -> checkpoint -> restore -> serve ->
-    online-learn, with its own smoke assertions (latency report, no drops,
-    measurable readout improvement)."""
+    online-learn -> multi-model + in-deployment rewire, with its own smoke
+    assertions (latency report, no drops, measurable readout improvement,
+    struct_every boundary crossed while serving)."""
     r = _run([sys.executable, "-m", "repro.launch.serve_bcpnn", "--smoke",
               "--ckpt-dir", str(tmp_path / "ckpt")])
     assert r.returncode == 0, r.stdout + r.stderr
     assert "smoke OK" in r.stdout
     assert "p99" in r.stdout
-    # a second run must RESTORE the checkpoint rather than retrain
+    assert "multi-model + rewire phase OK" in r.stdout
+    # a second run must RESTORE the checkpoint rather than retrain, and
+    # must be able to serve it as a multi-model deployment (--ckpt mode)
     r2 = _run([sys.executable, "-m", "repro.launch.serve_bcpnn", "--smoke",
-               "--ckpt-dir", str(tmp_path / "ckpt"), "--no-online"])
+               "--ckpt-dir", str(tmp_path / "ckpt"), "--no-online",
+               "--no-multi"])
     assert r2.returncode == 0, r2.stdout + r2.stderr
     assert "no checkpoint" not in r2.stdout
     assert "restored step" in r2.stdout
+    r3 = _run([sys.executable, "-m", "repro.launch.serve_bcpnn",
+               "--ckpt", str(tmp_path / "ckpt"),
+               "--ckpt", str(tmp_path / "ckpt"),
+               "--requests", "64", "--no-online"])
+    assert r3.returncode == 0, r3.stdout + r3.stderr
+    assert "model 'ckpt'" in r3.stdout and "model 'ckpt#2'" in r3.stdout
+    assert "aggregate" in r3.stdout
 
 
 def test_checkpoint_roundtrip_and_retention(tmp_path):
