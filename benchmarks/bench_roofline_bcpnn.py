@@ -3,33 +3,57 @@ on the TPU v5e target (197 TF/s bf16 / 819 GB/s HBM -> machine balance
 ~240 FLOP/B) — the same first-principles methodology as the paper's
 Eq. 2-5, with TPU resource terms instead of LUT/DSP counts.
 
-Arithmetic intensity of a combined BCPNN step (per batch of B images):
-    FLOPs  = 2*B*Ni*Nj (support) + 2*B*Ni*Nj (co-activation)
-             + ~8*Ni*Nj (EMA + log-weight epilogue) + softmax small
-    Bytes  = fused-schedule traffic (see bench_stream_vs_seq)
+Two placements per model:
+
+  * **combined step** (always f32): support + co-activation + EMA/weight
+    epilogue, the training/online-learning configuration — trace state
+    never leaves fp32 (DESIGN.md §8), so this point has no dtype axis;
+  * **inference-only forward**, one row per serving dtype (fp32 / bf16 /
+    int8): traffic from ``repro.launch.roofline.bcpnn_fwd_traffic`` with
+    bytes-per-element as the free variable.  Weight streaming dominates
+    the byte count at serving batch sizes, so bf16 roughly doubles and
+    int8 roughly quadruples arithmetic intensity — the ``intensity_gain``
+    column states the honest ratio vs the same model's fp32 row.
 """
 from __future__ import annotations
 
 from repro.configs.bcpnn_models import BCPNN_MODELS
+from repro.launch.roofline import bcpnn_fwd_traffic
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
+INFER_DTYPES = ("fp32", "bf16", "int8")
+
+
+def _place(flops: float, bytes_: float, batch: int) -> dict:
+    intensity = flops / bytes_
+    achievable = min(PEAK_FLOPS, intensity * HBM_BW)
+    return {"intensity": intensity,
+            "achievable_tflops": achievable / 1e12,
+            "roofline_frac": achievable / PEAK_FLOPS,
+            "proj_us_per_img": flops / achievable / batch * 1e6}
+
 
 def roofline_point(cfg, batch=128):
+    """Combined learn+infer step, all-f32 (the trace EMA pins it)."""
     ni = cfg.input_hc * cfg.input_mc
     nj = cfg.hidden_hc * cfg.hidden_mc
     b = batch
     flops = 2 * b * ni * nj * 2 + 8 * ni * nj + 6 * b * nj
     # fused traffic (f32): x, w, h, pij in/out, w out, mask
     bytes_ = 4 * (2 * b * ni + ni * nj * 4 + 2 * b * nj)
-    intensity = flops / bytes_
-    achievable = min(PEAK_FLOPS, intensity * HBM_BW)
-    frac = achievable / PEAK_FLOPS
-    # projected time per image on the TPU target
-    t_img = flops / achievable / b
-    return {"intensity": intensity, "achievable_tflops": achievable / 1e12,
-            "roofline_frac": frac, "proj_us_per_img": t_img * 1e6}
+    return _place(flops, bytes_, b)
+
+
+def infer_point(cfg, dtype: str, batch=128):
+    """Inference-only forward in one serving dtype (weights stream in
+    ``dtype``; activations arrive f32 and quantize on-chip)."""
+    t = bcpnn_fwd_traffic(batch, cfg.input_hc * cfg.input_mc,
+                          cfg.hidden_hc * cfg.hidden_mc,
+                          weight_dtype=dtype, act_dtype="fp32",
+                          n_hc=cfg.hidden_hc)
+    return _place(t["flops"], t["bytes"], batch)
 
 
 def run(csv=True):
@@ -45,6 +69,17 @@ def run(csv=True):
             print(f"roofline_{name},{r['achievable_tflops']:.1f},achievable_tflops")
             print(f"roofline_{name},{r['roofline_frac']*100:.0f},roofline_pct")
             print(f"roofline_{name},{r['proj_us_per_img']:.2f},proj_us_per_img")
+        base = infer_point(cfg, "fp32")
+        for dt in INFER_DTYPES:
+            ri = infer_point(cfg, dt)
+            ri["name"] = f"{name}-infer-{dt}"
+            ri["intensity_gain"] = ri["intensity"] / base["intensity"]
+            rows.append(ri)
+            if csv:
+                tag = f"roofline_{name}_infer_{dt}"
+                print(f"{tag},{ri['intensity']:.1f},flop_per_byte")
+                print(f"{tag},{ri['intensity_gain']:.2f},intensity_gain_vs_fp32")
+                print(f"{tag},{ri['proj_us_per_img']:.2f},proj_us_per_img")
     return rows
 
 

@@ -13,6 +13,10 @@ Two sections:
   admission front under a 10:1 skewed Poisson mix, recording per-model
   images/s + p50/p99 and the minority completion share — the fairness
   surface the round-robin scheduler is designed for.
+* **Serving-dtype sweep** — ONE trained compact-patchy model served at
+  capacity under each ``infer_dtype`` (fp32 / bf16 / int8, DESIGN.md
+  §8): same checkpoint, same engine, only the packed inference weights
+  change — images/s, p99 and served accuracy per dtype.
 
 Output: ``name,value,unit`` CSV rows, one machine-readable
 ``bench_serve_json={...}`` line, and a JSON dump (default
@@ -139,15 +143,70 @@ def bench_multi_model(rates=(400.0,), skew: float = 10.0, side: int = 8,
     return rows
 
 
+def bench_infer_dtype(dtypes=("fp32", "bf16", "int8"), rate: float = 1e5,
+                      side: int = 8, n_classes: int = 4,
+                      requests: int = 128, max_batch: int = 16,
+                      epochs: int = 6, seed: int = 0, csv: bool = True):
+    """One compact-patchy checkpoint served under each serving dtype:
+    the engine packs (casts / per-HC-quantizes) the SAME fp32 state at
+    registration, so the sweep isolates the packed-forward cost and the
+    served-accuracy delta of the dtype.  Uses the same dataset size as
+    ``run.py --assert-quant-accuracy`` so the served model is well above
+    chance and the delta is informative."""
+    ds = make_synthetic(768, 256, side, n_classes, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec = deep_synth_spec(side=side, depth=1, n_classes=n_classes,
+                           hidden_hc=8, hidden_mc=16,
+                           nact=[max(2, side * side // 2)],
+                           patchy_traces=True, compact=True,
+                           struct_every=25, backend="pallas")
+    tr = Trainer(spec, seed=seed)
+    tr.fit(xt, ds.y_train, epochs=epochs, batch=64)
+    rows = []
+    base_acc = None
+    for dt in dtypes:
+        svc = BCPNNService(tr.state, spec, max_batch=max_batch,
+                           infer_dtype=dt).start()
+        rep = run_open_loop(svc, xe, ds.y_test, n_requests=requests,
+                            rate_hz=rate, seed=seed)
+        svc.stop()
+        snap = svc.snapshot()
+        acc = rep.accuracy()
+        if dt == "fp32":
+            base_acc = acc
+        row = {
+            "infer_dtype": dt,
+            "offered_hz": rate,
+            "images_per_s": snap["images_per_s"],
+            "p50_ms": snap["p50_ms"],
+            "p99_ms": snap["p99_ms"],
+            "batch_occupancy": snap["batch_occupancy"],
+            "served_accuracy": acc,
+            "accuracy_delta_pp": ((base_acc - acc) * 100
+                                  if base_acc is not None else 0.0),
+        }
+        rows.append(row)
+        if csv:
+            tag = f"serve_dtype_{dt}"
+            print(f"{tag},{row['images_per_s']:.1f},images_per_s")
+            print(f"{tag},{row['p99_ms']:.2f},p99_ms")
+            print(f"{tag},{acc*100:.1f},served_accuracy_pct")
+            print(f"{tag},{row['accuracy_delta_pp']:.2f},acc_delta_pp")
+    return rows
+
+
 def run(csv=True, json_path="BENCH_serve.json", rates=(200.0, 1e5),
         backends=("jnp", "pallas"), requests=128,
-        multi_rates=(400.0, 1e5)):
+        multi_rates=(400.0, 1e5), dtypes=("fp32", "bf16", "int8")):
     rows = []
     for backend in backends:
         rows += bench_backend(backend, rates, requests=requests, csv=csv)
     multi_rows = bench_multi_model(rates=multi_rates,
                                    requests=max(requests, 256), csv=csv)
+    dtype_rows = bench_infer_dtype(dtypes=dtypes, requests=requests,
+                                   csv=csv)
     summary = {"rows": rows, "multi_model": multi_rows,
+               "infer_dtype": dtype_rows,
                "device": jax.default_backend()}
     if csv:
         print("bench_serve_json=" + json.dumps(summary))
@@ -169,9 +228,13 @@ if __name__ == "__main__":
                          "multi-model sweep")
     ap.add_argument("--backends", default="jnp,pallas")
     ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--infer-dtype", default="fp32,bf16,int8",
+                    help="comma-separated serving dtypes for the "
+                         "precision sweep")
     args = ap.parse_args()
     run(json_path=args.json or None,
         rates=tuple(float(r) for r in args.rates.split(",")),
         backends=tuple(args.backends.split(",")),
         requests=args.requests,
-        multi_rates=tuple(float(r) for r in args.multi_rates.split(",")))
+        multi_rates=tuple(float(r) for r in args.multi_rates.split(",")),
+        dtypes=tuple(args.infer_dtype.split(",")))

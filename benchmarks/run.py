@@ -18,12 +18,19 @@ snapshot, but both schedules of one run share the machine and geometry,
 so their ratio is the transportable signal.  The run must use the same
 ``--scale`` as the committed snapshot (the ratio is geometry-dependent;
 the gate enforces this).
+
+``--assert-quant-accuracy`` is the CI gate for the low-precision serving
+path (DESIGN.md §8): it trains a small compact-patchy network on the
+synthetic task and fails if bf16 or int8 inference loses more than
+0.5pp eval accuracy vs the same state's fp32 path.  Accuracy, unlike
+step time, IS machine-transportable, so this gate compares absolutes.
 """
 import argparse
 import json
 import sys
 
 REGRESSION_HEADROOM = 0.8  # fresh ratio must be >= 80% of committed
+MAX_QUANT_ACC_DELTA_PP = 0.5  # low-precision eval may lose at most this
 # Only gate geometries whose committed patchy-vs-padded margin is material:
 # a ratio barely above parity (e.g. model1's 1.04x) leaves less slack than
 # shared-runner timing noise, which is exactly the flaky assert the old CI
@@ -69,6 +76,43 @@ def assert_patchy_speedup(fresh: dict, baseline: dict) -> None:
     print(f"assert_patchy_speedup,OK,{checked}_geometries")
 
 
+def assert_quant_accuracy(max_delta_pp: float = MAX_QUANT_ACC_DELTA_PP,
+                          epochs: int = 6, seed: int = 0) -> dict:
+    """Train small, eval the SAME fp32 state under each serving dtype
+    (``infer`` reroutes low-precision specs through the packed path, so
+    this measures exactly what the engine serves)."""
+    from repro.configs.bcpnn_models import deep_synth_spec
+    from repro.core import Trainer, evaluate_padded
+    from repro.data.synthetic import encode_images, make_synthetic
+
+    ds = make_synthetic(768, 256, 8, 4, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec = deep_synth_spec(side=8, depth=1, n_classes=4, hidden_hc=8,
+                           hidden_mc=16, nact=[32], patchy_traces=True,
+                           compact=True, struct_every=25, backend="pallas")
+    tr = Trainer(spec, seed=seed)
+    tr.fit(xt, ds.y_train, epochs=epochs, batch=64)
+    acc32 = evaluate_padded(tr.state, spec, xe, ds.y_test, 64)
+    print(f"assert_quant_accuracy,{acc32*100:.2f},fp32_acc_pct")
+    out = {"fp32": acc32}
+    for dt in ("bf16", "int8"):
+        acc = evaluate_padded(tr.state, spec.with_infer_dtype(dt),
+                              xe, ds.y_test, 64)
+        delta = (acc32 - acc) * 100
+        out[dt] = acc
+        print(f"assert_quant_accuracy,{acc*100:.2f},{dt}_acc_pct "
+              f"(delta {delta:+.2f}pp, max {max_delta_pp}pp)")
+        if delta > max_delta_pp:
+            raise SystemExit(
+                f"low-precision accuracy regression: {dt} inference lost "
+                f"{delta:.2f}pp vs fp32 ({acc32*100:.2f}% -> "
+                f"{acc*100:.2f}%), more than the {max_delta_pp}pp budget "
+                f"— inspect the quantization path (kernels/quant.py, "
+                f"DESIGN.md §8)")
+    print("assert_quant_accuracy,OK,2_dtypes")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -82,6 +126,10 @@ def main() -> None:
     ap.add_argument("--assert-patchy-speedup", action="store_true",
                     help="fail if the kernels bench's patchy/padded step "
                          "ratio regressed >20%% vs --baseline")
+    ap.add_argument("--assert-quant-accuracy", action="store_true",
+                    help="fail if bf16/int8 inference loses more than "
+                         f"{MAX_QUANT_ACC_DELTA_PP}pp eval accuracy vs "
+                         "fp32 on the synthetic task")
     ap.add_argument("--baseline", default="BENCH_kernels.json",
                     help="committed snapshot the speedup gate compares to")
     args = ap.parse_args()
@@ -117,10 +165,14 @@ def main() -> None:
         "kernels": run_kernels,
         "bcpnn": bench_bcpnn.run,
         "struct": bench_struct.run,
+        "quant_accuracy": assert_quant_accuracy,
     }
     selected = (args.only.split(",") if args.only
                 else [k for k in benches
-                      if not (args.quick and k in ("bcpnn", "struct"))])
+                      if not (args.quick and k in ("bcpnn", "struct"))
+                      and k != "quant_accuracy"])
+    if args.assert_quant_accuracy and "quant_accuracy" not in selected:
+        selected.append("quant_accuracy")
     if args.assert_patchy_speedup and "kernels" not in selected:
         print("--assert-patchy-speedup requires the kernels bench",
               file=sys.stderr)

@@ -30,6 +30,11 @@ from .traces import Traces, init_traces, mutual_information, weights_from_traces
 
 BACKENDS = ("jnp", "pallas")
 
+# Serving dtypes of the dtype-polymorphic inference path (DESIGN.md §8).
+# Learning state is fp32 regardless; ``infer_dtype`` governs only the
+# derived inference weights a fold produces (``pack_projection``).
+INFER_DTYPES = ("fp32", "bf16", "int8")
+
 
 @dataclasses.dataclass(frozen=True)
 class ProjSpec:
@@ -56,11 +61,17 @@ class ProjSpec:
     compact: bool = False      # compact-RESIDENT state: pij/w stored as
     #                            (Hj, K, Mj) + index-table leaf; the learn
     #                            path never materializes (Ni, Nj)
+    infer_dtype: str = "fp32"  # serving dtype of the derived inference
+    #                            weights: fp32 | bf16 (cast-on-fold) |
+    #                            int8 (per-HC quantized); DESIGN.md §8
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected one of {BACKENDS}")
+        if self.infer_dtype not in INFER_DTYPES:
+            raise ValueError(f"unknown infer_dtype {self.infer_dtype!r}; "
+                             f"expected one of {INFER_DTYPES}")
         if self.compact and not (self.patchy_traces and is_patchy(self)):
             raise ValueError(
                 "ProjSpec.compact requires patchy_traces=True and a binding "
@@ -70,6 +81,9 @@ class ProjSpec:
 
     def with_backend(self, backend: str) -> "ProjSpec":
         return dataclasses.replace(self, backend=backend)
+
+    def with_infer_dtype(self, infer_dtype: str) -> "ProjSpec":
+        return dataclasses.replace(self, infer_dtype=infer_dtype)
 
 
 @jax.tree_util.register_dataclass
@@ -90,6 +104,28 @@ class Projection:
     b: jax.Array     # (Nj,)    log-prior biases
     mask: jax.Array  # (Hi, Hj) float {0,1} structural connectivity
     table: Optional[jax.Array] = None  # (Hj, nact) int32, compact only
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class InferPack:
+    """Derived, forward-only view of one projection in its serving dtype
+    (DESIGN.md §8) — what a serve model slot actually reads per request.
+
+    Built by ``pack_projection`` from the fp32 state at fold boundaries
+    (after feedback folds and ``struct_every`` rewires, never
+    per-request): ``w`` is the inference weight matrix cast (bf16) or
+    per-post-HC quantized (int8, with ``scale``), in the dense (Ni, Nj)
+    or compact (Hj, K, Mj) layout of its projection; ``table`` carries
+    the patchy index table as *data*, so the jitted serving forward never
+    re-derives it from the mask.  fp32 packs alias the projection's own
+    arrays — packing is free when nothing is quantized.
+    """
+
+    w: jax.Array                       # weights in the serving dtype
+    b: jax.Array                       # (Nj,) log-prior bias
+    scale: Optional[jax.Array] = None  # (Hj,) per-post-HC scales, int8 only
+    table: Optional[jax.Array] = None  # (Hj, nact), patchy only
 
 
 def is_patchy(spec: ProjSpec) -> bool:
@@ -247,6 +283,12 @@ def _pallas_ops():
     return ops
 
 
+def _quant_ops():
+    # Lazy like _pallas_ops: kernels.quant imports core.compact.
+    from ..kernels import quant
+    return quant
+
+
 def forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
     """Activation stage: rates -> post-synaptic rates.   x: (B, Ni)."""
     if spec.backend == "pallas":
@@ -261,10 +303,14 @@ def support(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
     dispatch point so a future support-only kernel slots in here.
     Compact-resident projections contract against the resident (Hj, K,
     Mj) weights instead of a dense matmul."""
+    # Accept low-precision weight operands (the bf16 cast-on-fold tier
+    # feeds this reference too): contract and accumulate in fp32.
+    w = proj.w if proj.w.dtype == jnp.float32 else proj.w.astype(jnp.float32)
+    b = proj.b if proj.b.dtype == jnp.float32 else proj.b.astype(jnp.float32)
     if is_compact(spec) and proj.table is not None:
-        return _compact_ops().compact_support(x, proj.w, proj.b, proj.table,
+        return _compact_ops().compact_support(x, w, b, proj.table,
                                               spec.pre.M)
-    return proj.b[None, :] + x @ proj.w
+    return b[None, :] + x @ w
 
 
 def normalize(support_vals: jax.Array, spec: ProjSpec) -> jax.Array:
@@ -282,6 +328,62 @@ def learn(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> Proje
     if is_compact(spec) and proj.table is not None:
         return _compact_ops().learn_compact_jnp(proj, spec, x, y)
     return _learn_jnp(proj, spec, x, y)
+
+
+# ------------------------------------------- packed (serving) dispatch ----
+
+def pack_projection(proj: Projection, spec: ProjSpec) -> InferPack:
+    """Derive the forward-only ``InferPack`` of one projection from its
+    fp32 state, in ``spec.infer_dtype`` — the fold-boundary half of the
+    precision contract (DESIGN.md §8).  Callers decide the cadence: the
+    serving engine packs after every feedback fold / rewire; ``infer``
+    packs inline (per jit trace) for honest low-precision evaluation.
+
+    Patchy projections get their index table attached here: from the
+    persistent leaf (compact-resident) or via the mask-identity memo
+    (``cached_table`` — dense-resident states pack on concrete arrays at
+    fold boundaries, so the table is rebuilt only when the mask actually
+    changed, i.e. on rewire)."""
+    table = proj.table
+    if table is None and is_patchy(spec):
+        table = _compact_ops().cached_table(proj.mask, spec.nact)
+    if spec.infer_dtype == "bf16":
+        return InferPack(w=proj.w.astype(jnp.bfloat16),
+                         b=proj.b.astype(jnp.bfloat16), table=table)
+    if spec.infer_dtype == "int8":
+        q = _quant_ops()
+        if proj.w.ndim == 3:
+            w_q, scale = q.quantize_compact(proj.w)
+        else:
+            w_q, scale = q.quantize_dense(proj.w, spec.post.H, spec.post.M)
+        return InferPack(w=w_q, b=proj.b, scale=scale, table=table)
+    return InferPack(w=proj.w, b=proj.b, table=table)
+
+
+def packed_forward(pack: InferPack, spec: ProjSpec, x: jax.Array) -> jax.Array:
+    """Activation stage from an ``InferPack`` — same dispatch contract as
+    ``forward`` but over the serving-dtype weights."""
+    if spec.backend == "pallas":
+        return _pallas_ops().fused_packed_forward(pack, spec, x)
+    return hc_softmax(packed_support(pack, spec, x), spec.post, spec.gain)
+
+
+def packed_support(pack: InferPack, spec: ProjSpec, x: jax.Array) -> jax.Array:
+    """Log-domain support from an ``InferPack``: fp32/bf16 contract in
+    fp32; int8 runs the fixed-point reference arithmetic (quantized
+    activations, scale-folded dequant).  Always returns fp32."""
+    if pack.w.dtype == jnp.int8:
+        q = _quant_ops()
+        if pack.w.ndim == 3:
+            return q.quant_support_compact_jnp(x, pack.w, pack.scale, pack.b,
+                                               pack.table, spec.pre.M)
+        return q.quant_support_dense_jnp(x, pack.w, pack.scale, pack.b,
+                                         spec.post.H, spec.post.M)
+    w = pack.w if pack.w.dtype == jnp.float32 else pack.w.astype(jnp.float32)
+    b = pack.b if pack.b.dtype == jnp.float32 else pack.b.astype(jnp.float32)
+    if pack.w.ndim == 3:
+        return _compact_ops().compact_support(x, w, b, pack.table, spec.pre.M)
+    return b[None, :] + x @ w
 
 
 # ------------------------------------------------------ jnp reference ----

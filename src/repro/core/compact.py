@@ -50,24 +50,47 @@ def build_table(mask: jax.Array, nact: int) -> jax.Array:
     return jnp.sort(idx, axis=1).astype(jnp.int32)
 
 
-# Host-side memo: mask identity -> table.  The compact-resident state
-# carries its table as a leaf (zero rebuilds on the hot path); this cache
-# covers the remaining eager call sites that derive a table from a
-# concrete mask (the dense-resident patchy forward, state conversion,
-# serving validation) so repeated calls on the same mask object do a dict
-# hit instead of a device top_k.  Keys hold the mask only weakly — a
+# Host-side memo: mask identity -> table, with a content-level fallback.
+# The compact-resident state carries its table as a leaf (zero rebuilds
+# on the hot path); this cache covers the remaining eager call sites that
+# derive a table from a concrete mask (the dense-resident patchy forward,
+# ``pack_projection`` at serving fold boundaries, state conversion,
+# serving validation).  Identity keys hold the mask only weakly — a
 # dropped state cannot be pinned by the cache.
 _TABLE_CACHE: dict = {}
+_TABLE_CONTENT_CACHE: dict = {}
 _TABLE_CACHE_MAX = 64
 
 
+def _deleted(arr) -> bool:
+    """True if a device array's buffer no longer exists (e.g. it was an
+    argument to a ``donate_argnums`` jit and got consumed)."""
+    is_deleted = getattr(arr, "is_deleted", None)
+    return bool(is_deleted()) if callable(is_deleted) else False
+
+
+def _evict(cache: dict, dead=lambda entry: False) -> None:
+    if len(cache) < _TABLE_CACHE_MAX:
+        return
+    for k in [k for k, v in cache.items() if dead(v)]:
+        del cache[k]
+    while len(cache) >= _TABLE_CACHE_MAX:
+        del cache[next(iter(cache))]
+
+
 def cached_table(mask: jax.Array, nact: int) -> jax.Array:
-    """``build_table`` memoized on the identity of a concrete ``mask``.
+    """``build_table`` memoized on a concrete ``mask`` — by identity
+    first, then by content.
 
     Tracers (calls under jit, where the result is part of the traced
-    graph anyway) bypass the cache.  Invalidation is by identity: rewire
-    produces a NEW mask array, so its table is a fresh entry, and the old
-    mask's entry dies with the old state (weakref).
+    graph anyway) bypass the cache.  The two levels serve different
+    churn: rewire produces a mask with NEW values (both levels miss —
+    the one legitimate rebuild), while an online-learning fold returns a
+    NEW buffer with UNCHANGED values every step (identity misses, the
+    content digest hits), so across a served learning stream the table
+    is rebuilt only on rewire.  The content check is one host digest of
+    the (Hi, Hj) HC-level mask — bytes, not an O(Ni·Nj) array — at fold
+    cadence, against a device top_k + sort saved per rebuild.
     """
     if isinstance(mask, jax.core.Tracer):
         return build_table(mask, nact)
@@ -75,20 +98,26 @@ def cached_table(mask: jax.Array, nact: int) -> jax.Array:
     hit = _TABLE_CACHE.get(key)
     if hit is not None:
         ref, table = hit
-        if ref() is mask:
+        # A cached table's buffer can be DELETED after the array was
+        # handed to a donating jit (Trainer's train steps donate the
+        # state, and the compact state carries the table as a leaf) —
+        # a dead hit must rebuild, never be returned.
+        if ref() is mask and not _deleted(table):
             return table
         del _TABLE_CACHE[key]
-    table = build_table(mask, nact)
+    import numpy as np
+    host = np.asarray(jax.device_get(mask))
+    ckey = (host.tobytes(), host.shape, str(host.dtype), nact)
+    table = _TABLE_CONTENT_CACHE.get(ckey)
+    if table is None or _deleted(table):
+        table = build_table(mask, nact)
+        _evict(_TABLE_CONTENT_CACHE)
+        _TABLE_CONTENT_CACHE[ckey] = table
     try:
         ref = weakref.ref(mask)
     except TypeError:
         return table
-    if len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
-        # drop dead entries first, then oldest
-        for k in [k for k, (r, _) in _TABLE_CACHE.items() if r() is None]:
-            del _TABLE_CACHE[k]
-        while len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
-            del _TABLE_CACHE[next(iter(_TABLE_CACHE))]
+    _evict(_TABLE_CACHE, dead=lambda entry: entry[0]() is None)
     _TABLE_CACHE[key] = (ref, table)
     return table
 

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from .bcpnn_layer import (
+    InferPack,
     Projection,
     ProjSpec,
     forward,
@@ -40,6 +41,9 @@ from .bcpnn_layer import (
     learn,
     maybe_rewire,
     normalize,
+    pack_projection,
+    packed_forward,
+    packed_support,
     support,
 )
 from .hypercolumns import LayerGeom
@@ -96,6 +100,18 @@ class NetworkSpec:
             readout=self.readout.with_backend(backend),
         )
 
+    def with_infer_dtype(self, infer_dtype: str) -> "NetworkSpec":
+        """Same network, every projection serving in ``infer_dtype``."""
+        return NetworkSpec(
+            projs=tuple(p.with_infer_dtype(infer_dtype) for p in self.projs),
+            readout=self.readout.with_infer_dtype(infer_dtype),
+        )
+
+    @property
+    def uses_low_precision(self) -> bool:
+        return any(p.infer_dtype != "fp32"
+                   for p in self.projs + (self.readout,))
+
 
 def _as_geom(g: GeomLike) -> LayerGeom:
     return g if isinstance(g, LayerGeom) else LayerGeom(*g)
@@ -115,6 +131,7 @@ def make_network_spec(
     struct_every: int = 0,
     patchy_traces: bool = False,
     compact: bool = False,
+    infer_dtype: str = "fp32",
 ) -> NetworkSpec:
     """Build a NetworkSpec for a stack of ``len(hidden)`` hidden layers.
 
@@ -145,12 +162,14 @@ def make_network_spec(
                  backend=backend, support_noise=support_noise,
                  noise_steps=noise_steps, struct_every=struct_every,
                  patchy_traces=patchy_traces,
-                 compact=compact and patchy_traces and ok)
+                 compact=compact and patchy_traces and ok,
+                 infer_dtype=infer_dtype)
         for (pre, post, na), ok in zip(
             zip(geoms[:-1], geoms[1:], nacts), eligible)
     )
     readout = ProjSpec(geoms[-1], LayerGeom(1, n_classes), alpha=alpha,
-                       eps=eps, gain=gain, nact=None, backend=backend)
+                       eps=eps, gain=gain, nact=None, backend=backend,
+                       infer_dtype=infer_dtype)
     return NetworkSpec(projs=projs, readout=readout)
 
 
@@ -300,12 +319,64 @@ def online_learn_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
                      step=state.step + 1, key=state.key)
 
 
+# ------------------------------------------------- packed inference ----
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class InferParams:
+    """Forward-only network view in the serving dtypes (a pytree): one
+    ``InferPack`` per stack projection + the readout.  Derived from the
+    fp32 ``DeepState`` by ``pack_state`` at fold boundaries; this is what
+    a serve model slot holds and what the jitted serving forward reads
+    (DESIGN.md §8)."""
+
+    projs: Tuple[InferPack, ...]
+    readout: InferPack
+
+
+def pack_state(state: DeepState, spec_or_cfg) -> InferParams:
+    """Derive every projection's inference weights from the fp32 state
+    in its spec'd ``infer_dtype``.  fp32 packs alias the state's arrays
+    (free); bf16 casts; int8 quantizes with per-post-HC scales."""
+    spec = as_spec(spec_or_cfg)
+    return InferParams(
+        projs=tuple(pack_projection(p, ps)
+                    for p, ps in zip(state.projs, spec.projs)),
+        readout=pack_projection(state.readout, spec.readout),
+    )
+
+
+def infer_packed(params: InferParams, spec_or_cfg, x: jax.Array,
+                 valid: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """``infer`` over pre-derived ``InferParams``: the serving hot path.
+    Identical to ``infer`` for all-fp32 specs (packs alias the state);
+    low-precision specs serve through the cast/quantized weights packed
+    at the last fold boundary — never requantized per request."""
+    spec = as_spec(spec_or_cfg)
+    h = x
+    for pack, pspec in zip(params.projs, spec.projs):
+        h = packed_forward(pack, pspec, h)
+    s = packed_support(params.readout, spec.readout, h)
+    probs = normalize(s, spec.readout)
+    pred = jnp.argmax(probs, axis=-1)
+    if valid is not None:
+        keep = valid.astype(bool)
+        probs = probs * keep[:, None].astype(probs.dtype)
+        pred = jnp.where(keep, pred, -1)
+    return probs, pred
+
+
 def infer(state: DeepState, spec_or_cfg, x: jax.Array,
           valid: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
     """Inference-only path: class probabilities + argmax predictions.
 
     No trace reads beyond the folded weights and no state writes — the
     analogue of the paper's resource-light inference-only configuration.
+    Specs with a low-precision ``infer_dtype`` evaluate through the same
+    pack + packed-forward path the serving engine uses (the packing cost
+    folds into the jit trace), so offline accuracy numbers are honest
+    about the serving dtype; all-fp32 specs keep the direct state reads.
 
     ``valid`` (optional, (B,) bool/0-1) marks genuine rows of a padded
     batch: the forward pass is row-independent, so padding rows cannot
@@ -314,6 +385,8 @@ def infer(state: DeepState, spec_or_cfg, x: jax.Array,
     trainer's padded eval — can never mistake a pad slot for a result.
     """
     spec = as_spec(spec_or_cfg)
+    if spec.uses_low_precision:
+        return infer_packed(pack_state(state, spec), spec, x, valid)
     h = stack_rates(state, spec, x)
     s = support(state.readout, spec.readout, h)
     probs = normalize(s, spec.readout)
@@ -347,6 +420,7 @@ class BCPNNConfig:
     backend: str = "jnp"   # backend for both projections
     patchy_traces: bool = False  # patchy plasticity on the ih projection
     compact: bool = False  # compact-resident ih state (requires patchy_traces)
+    infer_dtype: str = "fp32"  # serving dtype for both projections (§8)
 
     @property
     def input_geom(self) -> LayerGeom:
@@ -376,12 +450,13 @@ class BCPNNConfig:
                         noise_steps=self.noise_steps,
                         struct_every=self.struct_every,
                         patchy_traces=self.patchy_traces,
-                        compact=self.compact)
+                        compact=self.compact,
+                        infer_dtype=self.infer_dtype)
 
     def ho_spec(self) -> ProjSpec:
         return ProjSpec(self.hidden_geom, self.output_geom, alpha=self.alpha,
                         eps=self.eps, gain=self.gain, nact=None,
-                        backend=self.backend)
+                        backend=self.backend, infer_dtype=self.infer_dtype)
 
     def network_spec(self) -> NetworkSpec:
         return NetworkSpec(projs=(self.ih_spec(),), readout=self.ho_spec())

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.bcpnn_layer import (
-    Projection, ProjSpec, expand_hc_mask, is_compact, is_patchy,
+    InferPack, Projection, ProjSpec, expand_hc_mask, is_compact, is_patchy,
 )
 from ..core.compact import cached_table
 from ..core.traces import Traces
@@ -39,6 +39,7 @@ from .bcpnn_fwd import bcpnn_fwd_pallas
 from .bcpnn_update import bcpnn_update_pallas
 from .hc_softmax import hc_softmax_pallas
 from .patchy import compact_forward, compact_update, patchy_forward, patchy_update
+from .quant import quant_compact_forward, quant_fwd_pallas, quant_patchy_forward
 
 # Force interpret mode on ("1") or off ("0") regardless of the detected
 # backend — tests and CI pin the interpreter explicitly with this.
@@ -68,6 +69,9 @@ _KERNEL_BLOCKS = {
     "patchy_update": ("block_i", "block_k"),
     "compact_forward": ("block_b", "block_k"),
     "compact_update": ("block_i", "block_k"),
+    "quant_fwd": ("block_b", "block_j", "block_k"),
+    "quant_patchy_forward": ("block_b", "block_k"),
+    "quant_compact_forward": ("block_b", "block_k"),
 }
 
 
@@ -130,6 +134,55 @@ def fused_forward(proj: Projection, spec: ProjSpec, x: jax.Array) -> jax.Array:
             spec.post.H, spec.post.M, spec.gain,
             interpret=_interpret(), **kw)
     return bcpnn_fwd(x, proj.w, proj.b, spec.post.H, spec.post.M, spec.gain)
+
+
+def fused_packed_forward(pack: InferPack, spec: ProjSpec,
+                         x: jax.Array) -> jax.Array:
+    """Kernel-fused forward from an ``InferPack`` (DESIGN.md §8).
+
+    fp32/bf16 packs route through the same kernels as ``fused_forward``
+    (their matmuls cast operands to fp32 in-kernel, so bf16 weights are
+    a pure bandwidth win); int8 packs route through the fixed-point
+    kernels in kernels/quant.py with the pack's per-HC scales folded
+    into the softmax epilogue.  The patchy index table comes from the
+    pack — never re-derived from the mask on the serving path."""
+    b = x.shape[0]
+    if pack.w.dtype == jnp.int8:
+        if pack.w.ndim == 3:  # compact-resident layout
+            hj, k_units, mj = pack.w.shape
+            kw = _blocks("quant_compact_forward", {}, b=b, k=k_units,
+                         hj=hj, mj=mj)
+            return quant_compact_forward(
+                x, pack.w, pack.b, pack.scale, pack.table, spec.pre.M,
+                spec.gain, interpret=_interpret(), **kw)
+        if is_patchy(spec) and pack.table is not None:
+            kw = _blocks("quant_patchy_forward", {}, b=b,
+                         k=spec.nact * spec.pre.M, hj=spec.post.H,
+                         mj=spec.post.M)
+            return quant_patchy_forward(
+                x, pack.w, pack.b, pack.scale, pack.table, spec.pre.M,
+                spec.post.H, spec.post.M, spec.gain,
+                interpret=_interpret(), **kw)
+        kw = _blocks("quant_fwd", {}, b=b, ni=x.shape[1],
+                     n_hc=spec.post.H, n_mc=spec.post.M)
+        return quant_fwd_pallas(x, pack.w, pack.b, pack.scale, spec.post.H,
+                                spec.post.M, spec.gain,
+                                interpret=_interpret(), **kw)
+    if pack.w.ndim == 3:
+        kw = _blocks("compact_forward", {}, b=b,
+                     k=spec.nact * spec.pre.M, hj=spec.post.H,
+                     mj=spec.post.M)
+        return compact_forward(x, pack.w, pack.b, pack.table, spec.pre.M,
+                               spec.gain, interpret=_interpret(), **kw)
+    if is_patchy(spec) and pack.table is not None:
+        kw = _blocks("patchy_forward", {}, b=b,
+                     k=spec.nact * spec.pre.M, hj=spec.post.H,
+                     mj=spec.post.M)
+        return patchy_forward(
+            x, pack.w, pack.b, pack.table, spec.pre.M,
+            spec.post.H, spec.post.M, spec.gain,
+            interpret=_interpret(), **kw)
+    return bcpnn_fwd(x, pack.w, pack.b, spec.post.H, spec.post.M, spec.gain)
 
 
 def fused_learn(proj: Projection, spec: ProjSpec, x: jax.Array,

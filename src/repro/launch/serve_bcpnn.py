@@ -78,7 +78,8 @@ def serve_checkpoints(args) -> None:
     svc = BCPNNService.multi(
         models, max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
         online_learning=not args.no_online, learn_stack=args.learn_stack,
-        feedback_batch=args.feedback_batch).start()
+        feedback_batch=args.feedback_batch,
+        infer_dtype=args.infer_dtype).start()
     streams = {}
     for i, (name, (_, spec)) in enumerate(models.items()):
         x, y = _pool_for(spec, max(64, args.requests), args.seed + i)
@@ -142,6 +143,13 @@ def main():
                     help="skip the multi-model + rewire phase in --smoke")
     ap.add_argument("--feedback-frac", type=float, default=0.8)
     ap.add_argument("--feedback-batch", type=int, default=16)
+    ap.add_argument("--infer-dtype", choices=["fp32", "bf16", "int8"],
+                    default=None,
+                    help="serving precision override for every hosted "
+                         "model: weights are cast (bf16) or per-HC "
+                         "quantized (int8) from the fp32 state at fold "
+                         "boundaries; default honors each checkpoint "
+                         "manifest's own infer_dtype tag")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -201,7 +209,8 @@ def main():
 
     # ---- phase 2: inference-only serving --------------------------------
     svc = BCPNNService(state, spec, max_batch=args.max_batch,
-                       max_wait_ms=args.max_wait_ms).start()
+                       max_wait_ms=args.max_wait_ms,
+                       infer_dtype=args.infer_dtype).start()
     rep = run_open_loop(svc, xe, ds.y_test, n_requests=args.requests,
                         rate_hz=args.rate, seed=args.seed)
     svc.stop()
@@ -221,7 +230,8 @@ def main():
         svc2 = BCPNNService(cold, spec, max_batch=args.max_batch,
                             max_wait_ms=args.max_wait_ms,
                             online_learning=True,
-                            feedback_batch=args.feedback_batch).start()
+                            feedback_batch=args.feedback_batch,
+                            infer_dtype=args.infer_dtype).start()
         rep2 = run_open_loop(svc2, xe, ds.y_test, n_requests=args.requests,
                              rate_hz=args.rate, seed=args.seed + 1,
                              feedback_frac=args.feedback_frac,
@@ -272,7 +282,7 @@ def main():
             {"dense": (state, spec), "patchy": (tr_p.state, spec_p)},
             max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
             online_learning=True, learn_stack=True,
-            feedback_batch=8).start()
+            feedback_batch=8, infer_dtype=args.infer_dtype).start()
         reports = run_multi_open_loop(
             msvc,
             {"dense": StreamSpec(xe, ds.y_test, rate_hz=args.rate),

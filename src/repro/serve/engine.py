@@ -52,9 +52,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.bcpnn_layer import validate_patchy_state
+from ..core.bcpnn_layer import INFER_DTYPES, validate_patchy_state
 from ..core.network import (
-    as_spec, infer, online_learn_step, supervised_readout_step,
+    as_spec, infer_packed, online_learn_step, pack_state,
+    supervised_readout_step,
 )
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .metrics import ServeMetrics
@@ -101,6 +102,17 @@ class _ModelSlot:
     learn_fn: Any
     feedback: collections.deque
     target_bucket: int               # adaptive active bucket (worker only)
+    pack: Any = None                 # InferParams derived at fold boundaries
+
+    def repack(self) -> None:
+        """Re-derive the serving-dtype inference weights from the fp32
+        state.  Called at fold boundaries ONLY (model registration, after
+        each feedback fold / in-deployment rewire, state swap) — never on
+        the per-request path; requests between folds serve the packed
+        weights as-is (DESIGN.md §8).  Runs eagerly on concrete arrays so
+        a patchy pack reuses the memoized index table unless the mask
+        actually changed (a rewire)."""
+        self.pack = pack_state(self.state, self.spec)
 
 
 def _validate_state(state, spec, name: str) -> None:
@@ -136,7 +148,17 @@ class BCPNNService:
                  feedback_batch: int = 32, metrics_window: int = 4096,
                  poll_ms: float = 20.0, result_retention: int = 4096,
                  learn_stack: bool = False, adaptive_buckets: bool = True,
-                 feedback_eager: bool = True, name: str = DEFAULT_MODEL):
+                 feedback_eager: bool = True, name: str = DEFAULT_MODEL,
+                 infer_dtype: Optional[str] = None):
+        if infer_dtype is not None and infer_dtype not in INFER_DTYPES:
+            raise ValueError(f"infer_dtype must be one of {INFER_DTYPES}, "
+                             f"got {infer_dtype!r}")
+        # Engine-wide serving-precision override: when set, every hosted
+        # model's spec is re-tagged with this infer_dtype at registration
+        # (None = honor each spec/checkpoint's own tag).  Learning state
+        # stays fp32 either way — precision only changes the derived
+        # inference weights (DESIGN.md §8).
+        self.infer_dtype = infer_dtype
         self.online_learning = online_learning
         self.learn_stack = learn_stack
         self.adaptive_buckets = adaptive_buckets
@@ -200,9 +222,15 @@ class BCPNNService:
         if name in self._slots:
             raise ValueError(f"model {name!r} already registered")
         spec = as_spec(spec_or_cfg)
+        if self.infer_dtype is not None:
+            spec = spec.with_infer_dtype(self.infer_dtype)
         _validate_state(state, spec, name)
-        infer_fn = jax.jit(lambda st, x, v, _spec=spec:
-                           infer(st, _spec, x, valid=v))
+        # The serving forward runs over the slot's packed inference
+        # weights (InferParams), not the fp32 learning state: fp32 packs
+        # alias the state (bit-identical to infer()), bf16/int8 packs are
+        # re-derived only when a fold mutates the state.
+        infer_fn = jax.jit(lambda pk, x, v, _spec=spec:
+                           infer_packed(pk, _spec, x, valid=v))
         if self.learn_stack:
             learn_fn = jax.jit(lambda st, x, y, _spec=spec:
                                online_learn_step(st, _spec, x, y,
@@ -218,6 +246,7 @@ class BCPNNService:
             feedback=collections.deque(),
             target_bucket=self._buckets[-1],
         )
+        self._slots[name].repack()
         self._order.append(name)
 
     def models(self) -> Tuple[str, ...]:
@@ -244,6 +273,12 @@ class BCPNNService:
     def model_spec(self, model: Optional[str] = None):
         return self._slot(model).spec
 
+    def model_pack(self, model: Optional[str] = None):
+        """The packed serving-dtype inference weights (``InferParams``)
+        the model currently serves from — derived at the last fold
+        boundary (read after ``stop`` for a settled value)."""
+        return self._slot(model).pack
+
     def revalidate(self) -> None:
         """Re-run the deployment-boundary patchy/compact invariants on the
         CURRENT states — cheap (vectorized host check), useful after a
@@ -258,7 +293,9 @@ class BCPNNService:
 
     @state.setter
     def state(self, value):
-        self._slot(None).state = value
+        slot = self._slot(None)
+        slot.state = value
+        slot.repack()  # a state swap is a fold boundary
 
     @property
     def spec(self):
@@ -306,7 +343,7 @@ class BCPNNService:
         for slot in self._slots.values():
             ni = slot.spec.input_geom.N
             for b in self._buckets:
-                probs, _ = slot.infer_fn(slot.state,
+                probs, _ = slot.infer_fn(slot.pack,
                                          jnp.zeros((b, ni), jnp.float32),
                                          jnp.zeros((b,), jnp.float32))
                 jax.block_until_ready(probs)
@@ -465,7 +502,7 @@ class BCPNNService:
         bucket = pick_bucket(len(group), self._buckets)
         x, valid = pad_group([r.x for r in group], bucket)
         try:
-            probs, pred = slot.infer_fn(slot.state, jnp.asarray(x),
+            probs, pred = slot.infer_fn(slot.pack, jnp.asarray(x),
                                         jnp.asarray(valid))
             probs = np.asarray(probs)
             pred = np.asarray(pred)
@@ -511,6 +548,11 @@ class BCPNNService:
             x, y = cycle_batch(items, self.feedback_batch)
             slot.state = slot.learn_fn(slot.state, jnp.asarray(x),
                                        jnp.asarray(y))
+            # THE fold boundary: the fold (and any struct_every rewire
+            # inside it) just mutated the fp32 state, so the packed
+            # serving weights are re-derived here — stale int8 scales or
+            # bf16 casts never outlive a fold.
+            slot.repack()
             slot.metrics.record_learn(len(items))
             self._fb_cursor = (j + 1) % n
             return

@@ -135,7 +135,11 @@ def test_stop_racing_submits_never_strands_a_request():
     spec, state = _small_net()
     x = np.ones((spec.input_geom.N,), np.float32)
     for trial in range(3):
-        svc = BCPNNService(state, spec, max_batch=4, max_wait_ms=0.5)
+        # retention high enough that eviction can't race the collection
+        # loop below on a loaded machine (clients can admit thousands of
+        # cheap submits in the window); eviction has its own test.
+        svc = BCPNNService(state, spec, max_batch=4, max_wait_ms=0.5,
+                           result_retention=1_000_000)
         svc.start(warmup=(trial == 0))
         ids, done = [], threading.Event()
         lock = threading.Lock()
