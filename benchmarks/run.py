@@ -148,8 +148,25 @@ def main() -> None:
         # also the default baseline.
         baseline = None
         if args.assert_patchy_speedup:
-            with open(args.baseline) as f:
-                baseline = json.load(f)
+            try:
+                with open(args.baseline) as f:
+                    baseline = json.load(f)
+            except FileNotFoundError:
+                raise SystemExit(
+                    f"--assert-patchy-speedup: baseline file "
+                    f"{args.baseline!r} does not exist — run the kernels "
+                    f"bench once to record it, or point --baseline at the "
+                    f"committed snapshot")
+            except json.JSONDecodeError as e:
+                raise SystemExit(
+                    f"--assert-patchy-speedup: baseline {args.baseline!r} "
+                    f"is not valid JSON ({e}) — re-record it with the "
+                    f"kernels bench")
+            if "geometries" not in baseline or "scale" not in baseline:
+                raise SystemExit(
+                    f"--assert-patchy-speedup: baseline {args.baseline!r} "
+                    f"carries no geometries/scale spec — it is not a "
+                    f"kernels-bench snapshot; re-record it")
             # keep the committed snapshot pristine: the gate run records
             # its (machine/scale-specific) numbers next to it instead
             kernels_kw.setdefault("json_path", "BENCH_kernels.latest.json")

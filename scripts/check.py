@@ -1,0 +1,35 @@
+"""Repo invariant check — the one-command gate CI and pre-push hooks run.
+
+    python scripts/check.py            # lint + contracts, strict
+    python scripts/check.py --no-contracts   # lint only (fast)
+
+Thin wrapper over ``python -m repro.analysis --strict --contracts`` that
+works from any CWD without PYTHONPATH plumbing.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    fast = "--no-contracts" in argv
+    argv = [a for a in argv if a != "--no-contracts"]
+    # Must precede any jax import: the DP-seam check needs a 2-device
+    # host mesh, and platform flags are read once at jax init.
+    from repro.analysis.contracts import ensure_host_devices
+    ensure_host_devices(2)
+    os.environ.setdefault("JAX_PLATFORMS",
+                          os.environ.get("JAX_PLATFORM_NAME", "") or "cpu")
+    from repro.analysis.__main__ import main as analysis_main
+    args = ["--strict"] + ([] if fast else ["--contracts"]) + argv
+    return analysis_main(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,12 @@ def main(argv=None) -> int:
                     help="checkpoint step to migrate (default: latest)")
     args = ap.parse_args(argv)
 
+    import os
+    if not os.path.isdir(args.ckpt):
+        print(f"migrate_ckpt: checkpoint directory {args.ckpt!r} does not "
+              f"exist", file=sys.stderr)
+        return 2
+
     import jax
     from repro.checkpoint import CheckpointManager
     from repro.core.bcpnn_layer import validate_patchy_state

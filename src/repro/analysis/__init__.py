@@ -1,0 +1,26 @@
+"""repro.analysis — the repo's invariant lint + jaxpr contract checker.
+
+Two layers (ISSUE 7 / DESIGN.md §9):
+
+* **AST lint rules** (``lint.py``, ``rules.py``) — stdlib-``ast`` rules
+  encoding the contracts that previously lived only in prose: donated-jit
+  discipline, pad-fill hygiene, serve-lock discipline, jit-purity, and
+  the fp32-learning/packed-serving dtype split.  Findings carry
+  file:line anchors, inline suppressions require a reason, and a
+  committed baseline (``.analysis-baseline.json``) absorbs accepted
+  pre-existing findings.
+* **jaxpr/contract checks** (``contracts.py``, ``plans.py``) — runtime
+  sanitizers: the serving recompilation sentinel, the DP
+  ``optimization_barrier`` seam checker, the Pallas pad-plan auditor,
+  and the donated-buffer ``cached_table`` guard probe.
+
+CLI: ``python -m repro.analysis [--strict] [--contracts]`` (also
+``scripts/check.py``).  See each module's docstring for details.
+"""
+from .findings import Finding, load_baseline, save_baseline, split_baselined
+from .lint import Module, Rule, all_rules, lint_paths
+
+__all__ = [
+    "Finding", "Module", "Rule", "all_rules", "lint_paths",
+    "load_baseline", "save_baseline", "split_baselined",
+]

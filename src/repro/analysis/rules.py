@@ -1,0 +1,561 @@
+"""The repo's invariant catalog as machine-checked AST rules.
+
+Each rule encodes one contract that previously lived only in DESIGN.md
+prose (§§6–8) and in tests that catch violations late; DESIGN.md §9
+carries the human-readable catalog (contract, rationale, and which
+historical bug each rule would have caught at review time).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+from .lint import Module, Rule, dotted_name, register
+
+# --------------------------------------------------------------- helpers --
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums of a ``jax.jit(...)``-like call, or None."""
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                        out.append(e.value)
+                return tuple(out)
+            return ()  # dynamic value: positions unknown
+    return None
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    name = dotted_name(call.func)
+    if name.endswith("jax.jit") or name == "jit" or name == "jax.jit":
+        return True
+    # functools.partial(jax.jit, ...)
+    if name.endswith("partial") and call.args:
+        return dotted_name(call.args[0]).endswith("jit")
+    return False
+
+
+def _function_scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    """Yield every function/lambda scope plus the module itself."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+# ============================================================ donated-jit --
+
+
+@register
+class DonatedReuseRule(Rule):
+    """No read (or cache) of a buffer passed through ``donate_argnums``
+    after the donating call — the callee owns it and XLA may have
+    already reused its memory (the PR 6 ``cached_table`` dead-buffer
+    class: ``Array has been deleted`` at best, silent garbage at worst).
+    """
+
+    id = "donated-reuse"
+    contract = ("a variable passed at a donate_argnums position must not "
+                "be read after the donating call unless rebound first")
+
+    def check(self, module: Module) -> List[Finding]:
+        # Pass 1: names bound to donating jits, with donated positions.
+        # Covers ``f = jax.jit(g, donate_argnums=...)`` at any scope and
+        # ``@partial(jax.jit, donate_argnums=...)`` decorators.
+        donors: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                pos = (_donate_positions(node.value)
+                       if _is_jit_call(node.value) else None)
+                if pos:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            donors[t.id] = pos
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and _is_jit_call(dec):
+                        pos = _donate_positions(dec)
+                        if pos:
+                            donors[node.name] = pos
+        if not donors:
+            return []
+
+        out: List[Finding] = []
+        for scope in _function_scopes(module.tree):
+            body = getattr(scope, "body", None)
+            if not isinstance(body, list):
+                continue
+            out.extend(self._check_scope(module, body, donors))
+        return out
+
+    def _check_scope(self, module: Module, body: List[ast.stmt],
+                     donors: Dict[str, Tuple[int, ...]]) -> List[Finding]:
+        # Linear scan of the statement list: a call to a donor taints the
+        # Name args at donated positions; a later load of a tainted name
+        # is a finding; a store (rebind) clears the taint.  Nested
+        # function bodies are separate scopes (handled by the caller), so
+        # prune them here.
+        tainted: Dict[str, int] = {}  # name -> donating call line
+        out: List[Finding] = []
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                return
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                # evaluation order: RHS first (a donating call taints its
+                # args), THEN the targets (a rebind clears the taint) —
+                # this is what makes `state = step(state)` clean
+                if node.value is not None:
+                    visit(node.value)
+                for t in (node.targets if isinstance(node, ast.Assign)
+                          else [node.target]):
+                    visit(t)
+                return
+            if isinstance(node, ast.Call):
+                fname = dotted_name(node.func)
+                base = fname.split(".")[-1] if fname else ""
+                pos = donors.get(fname) or donors.get(base)
+                if pos:
+                    # visit args first: using a tainted name AS an arg of
+                    # a second donating call is itself a use-after-donate
+                    for child in ast.iter_child_nodes(node):
+                        visit(child)
+                    for p in pos:
+                        if p < len(node.args) and isinstance(node.args[p],
+                                                             ast.Name):
+                            tainted[node.args[p].id] = node.lineno
+                    return
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, ast.Store):
+                    tainted.pop(node.id, None)
+                elif isinstance(node.ctx, ast.Load) and node.id in tainted:
+                    out.append(module.finding(
+                        self.id, node,
+                        f"'{node.id}' was donated to a jit "
+                        f"(donate_argnums) at line {tainted[node.id]} and "
+                        f"read afterwards; its buffer may be deleted or "
+                        f"reused — recompute it from the call's result or "
+                        f"drop the donation"))
+                    del tainted[node.id]  # one finding per donation
+                return
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for stmt in body:
+            visit(stmt)
+        return out
+
+
+# ======================================================== pad-fill hygiene --
+
+
+_INF_NAMES = {"jnp.inf", "np.inf", "numpy.inf", "math.inf", "jax.numpy.inf"}
+
+
+def _is_inf(node: ast.AST) -> bool:
+    """Positive infinity in any spelling (the USub parent makes it a fill)."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float) and node.value == float("inf")
+    if isinstance(node, ast.Attribute):
+        return dotted_name(node) in _INF_NAMES
+    if isinstance(node, ast.Call) and dotted_name(node.func) == "float":
+        return bool(node.args) and isinstance(node.args[0], ast.Constant) \
+            and str(node.args[0].value).strip() == "inf"
+    return False
+
+
+def _inf_repr(node: ast.AST) -> str:
+    return dotted_name(node) or "float('inf')"
+
+
+@register
+class PadFillLiteralRule(Rule):
+    """Softmax-lane pad fills come from ``kernels.tiling.NEG`` /
+    ``kernels.padding.clamp_fill`` — never hand-rolled ``-1e30`` / -inf
+    literals, which overflow to -inf on a bf16/f16 cast and turn all-pad
+    hypercolumns into ``-inf - (-inf) = NaN`` inside the softmax."""
+
+    id = "pad-fill-literal"
+    contract = ("no hand-rolled -1e30 / -inf fill values; use "
+                "kernels.tiling.NEG or kernels.padding.clamp_fill")
+
+    # repro: suppress[pad-fill-literal] — the rule's own magnitude threshold
+    _FILL_MAG = 1e30
+
+    def check(self, module: Module) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            bad: Optional[str] = None
+            if isinstance(node, ast.Constant) and isinstance(
+                    node.value, float) and node.value == node.value and \
+                    abs(node.value) >= self._FILL_MAG and \
+                    abs(node.value) != float("inf"):
+                # huge finite magnitudes are fills whatever their sign
+                # (the source text `-1e30` parses as USub over this node)
+                bad = repr(node.value)
+            elif isinstance(node, ast.UnaryOp) and \
+                    isinstance(node.op, ast.USub) and _is_inf(node.operand):
+                bad = f"-{_inf_repr(node.operand)}"
+            elif isinstance(node, ast.Call) and \
+                    dotted_name(node.func) == "float" and node.args and \
+                    isinstance(node.args[0], ast.Constant) and \
+                    str(node.args[0].value).strip() == "-inf":
+                bad = "float('-inf')"
+            elif isinstance(node, ast.Attribute) and \
+                    dotted_name(node).endswith(".NINF"):
+                bad = dotted_name(node)
+            if bad is not None:
+                out.append(module.finding(
+                    self.id, node,
+                    f"hand-rolled fill literal {bad}: take softmax-lane "
+                    f"fills from kernels.tiling.NEG (clamped per-dtype by "
+                    f"kernels.padding.clamp_fill) so narrow-float casts "
+                    f"stay NaN-free"))
+        return out
+
+
+# ===================================================== serve-lock discipline --
+
+
+_MUTATORS = {"append", "appendleft", "extend", "extendleft", "insert",
+             "pop", "popleft", "popitem", "remove", "update", "setdefault",
+             "add", "discard"}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _lock_name(item: ast.withitem) -> Optional[str]:
+    attr = _self_attr(item.context_expr)
+    if attr is not None and "lock" in attr.lower():
+        return attr
+    return None
+
+
+class _Mutation:
+    __slots__ = ("attr", "node", "kind")
+
+    def __init__(self, attr: str, node: ast.AST, kind: str) -> None:
+        self.attr, self.node, self.kind = attr, node, kind
+
+
+def _mutations(node: ast.AST) -> List[_Mutation]:
+    """self-attribute mutations in a statement subtree: assignments,
+    augmented assignments, subscript stores, and container-mutator calls.
+    """
+    out: List[_Mutation] = []
+    for n in ast.walk(node):
+        targets: Sequence[ast.AST] = ()
+        if isinstance(n, ast.Assign):
+            targets = n.targets
+        elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+            targets = (n.target,)
+        for t in targets:
+            attr = _self_attr(t)
+            if attr is not None:
+                out.append(_Mutation(attr, t, "assignment"))
+            if isinstance(t, ast.Subscript):
+                attr = _self_attr(t.value)
+                if attr is not None:
+                    out.append(_Mutation(attr, t, "item assignment"))
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and n.func.attr in _MUTATORS:
+            attr = _self_attr(n.func.value)
+            if attr is not None:
+                out.append(_Mutation(attr, n, f".{n.func.attr}() call"))
+    return out
+
+
+@register
+class ServeLockRule(Rule):
+    """Any ``self`` attribute a class ever mutates under a
+    ``with self.<...lock...>:`` block is lock-guarded state: every other
+    mutation of it (outside ``__init__``) must also hold a lock,
+    otherwise the serving engine's telemetry/registry invariants race."""
+
+    id = "serve-lock"
+    contract = ("an attribute mutated under `with self._lock` is never "
+                "written without a lock outside __init__")
+
+    def check(self, module: Module) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ClassDef):
+                out.extend(self._check_class(module, node))
+        return out
+
+    def _check_class(self, module: Module,
+                     cls: ast.ClassDef) -> List[Finding]:
+        guarded: Dict[str, str] = {}      # attr -> lock attr
+        inside_lock: Set[int] = set()     # ids of nodes under any lock
+        for n in ast.walk(cls):
+            if isinstance(n, ast.With):
+                locks = [ln for item in n.items
+                         for ln in (_lock_name(item),) if ln]
+                if not locks:
+                    continue
+                for stmt in n.body:
+                    for sub in ast.walk(stmt):
+                        inside_lock.add(id(sub))
+                    for m in _mutations_of_body(n.body):
+                        guarded.setdefault(m.attr, locks[0])
+        if not guarded:
+            return []
+        out: List[Finding] = []
+        for fn in cls.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name == "__init__":
+                continue  # construction precedes sharing
+            for m in _mutations(fn):
+                if m.attr in guarded and id(m.node) not in inside_lock:
+                    out.append(module.finding(
+                        self.id, m.node,
+                        f"'self.{m.attr}' is mutated under "
+                        f"'self.{guarded[m.attr]}' elsewhere in "
+                        f"{cls.name}, but this {m.kind} holds no lock — "
+                        f"take the lock or document the threading story "
+                        f"with a suppression"))
+        return out
+
+
+def _mutations_of_body(body: List[ast.stmt]) -> List[_Mutation]:
+    out: List[_Mutation] = []
+    for stmt in body:
+        out.extend(_mutations(stmt))
+    return out
+
+
+# ============================================================= jit-purity --
+
+
+_IMPURE_CALLS = {
+    "jax.default_backend": "backend introspection re-initializes the "
+                           "platform and is not a traced value",
+    "jax.devices": "device topology is host state",
+    "jax.device_count": "device topology is host state",
+    "jax.local_device_count": "device topology is host state",
+    "time.time": "wall-clock reads burn in trace-time values",
+    "time.perf_counter": "wall-clock reads burn in trace-time values",
+    "time.monotonic": "wall-clock reads burn in trace-time values",
+    "time.process_time": "wall-clock reads burn in trace-time values",
+    "time.sleep": "blocking the trace thread",
+    "datetime.now": "wall-clock reads burn in trace-time values",
+    "os.getenv": "environment reads burn in trace-time values",
+    "input": "host I/O",
+    "open": "host I/O",
+    "print": "host I/O (use jax.debug.print / pl.debug_print)",
+}
+_IMPURE_PREFIXES = {
+    "np.random": "host RNG is invisible to jit caching — use jax.random",
+    "numpy.random": "host RNG is invisible to jit caching — use jax.random",
+    "random": "host RNG is invisible to jit caching — use jax.random",
+    "os.environ": "environment reads burn in trace-time values",
+}
+
+
+def _jitted_scopes(tree: ast.Module) -> Dict[str, str]:
+    """Names of functions that run under jit or as Pallas kernel bodies.
+
+    Detected: ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators,
+    ``name`` (or any name nested in the argument expression, e.g.
+    ``jax.jit(shard_map(step, ...))``) passed to ``jax.jit(...)``, and
+    the first argument of ``pl.pallas_call`` (directly or through
+    ``functools.partial``).
+    """
+    jitted: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if (isinstance(dec, ast.Call) and _is_jit_call(dec)) or \
+                        dotted_name(dec).endswith("jit"):
+                    jitted[node.name] = "jitted function"
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        if fname.endswith("jit") and node.args:
+            for sub in ast.walk(node.args[0]):
+                if isinstance(sub, ast.Name):
+                    jitted.setdefault(sub.id, "jitted function")
+        if fname.endswith("pallas_call") and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Call) and \
+                    dotted_name(target.func).endswith("partial") and \
+                    target.args:
+                target = target.args[0]
+            if isinstance(target, ast.Name):
+                jitted[target.id] = "Pallas kernel body"
+    return jitted
+
+
+@register
+class JitPurityRule(Rule):
+    """Jitted functions and Pallas kernel bodies trace once and replay:
+    host state read at trace time (backend queries, wall clock, host RNG,
+    environment) silently freezes into the compiled program — and churns
+    the jit cache when it changes."""
+
+    id = "jit-purity"
+    contract = ("no jax.default_backend/devices, wall-clock, host RNG, "
+                "os.environ, or host I/O inside jitted/kernel bodies")
+
+    def check(self, module: Module) -> List[Finding]:
+        jitted = _jitted_scopes(module.tree)
+        if not jitted:
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in jitted:
+                out.extend(self._check_body(module, node, jitted[node.name]))
+        return out
+
+    def _check_body(self, module: Module, fn: ast.AST,
+                    why: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func)
+            if not fname:
+                continue
+            reason = _IMPURE_CALLS.get(fname)
+            if reason is None:
+                for prefix, r in _IMPURE_PREFIXES.items():
+                    if fname == prefix or fname.startswith(prefix + "."):
+                        reason = r
+                        break
+            if reason is None and fname.endswith(".default_backend"):
+                reason = _IMPURE_CALLS["jax.default_backend"]
+            if reason is not None:
+                out.append(module.finding(
+                    self.id, node,
+                    f"impure call '{fname}' inside a {why}: {reason}"))
+        return out
+
+
+# ========================================================= dtype contracts --
+
+
+_LOW_PRECISION = {"bfloat16", "float16", "int8"}
+# The packing boundary (DESIGN.md §8): the only core functions that may
+# name a low-precision dtype — they derive SERVING views, never state.
+_PACK_FUNCS = {"pack_projection", "packed_support", "packed_forward",
+               "pack_state", "infer_packed"}
+
+
+@register
+class LearningDtypeRule(Rule):
+    """Learning state is fp32, full stop (DESIGN.md §8: trace increments
+    ``alpha*x`` underflow in bf16).  Inside ``src/repro/core/`` only the
+    pack/packed serving boundary may mention a low-precision dtype."""
+
+    id = "learning-dtype"
+    contract = ("no low-precision dtype (bf16/f16/int8) in core/ outside "
+                "the pack_*/packed_* serving boundary")
+
+    def check(self, module: Module) -> List[Finding]:
+        if "core/" not in module.path.replace("\\", "/"):
+            return []
+        allowed_spans: List[Tuple[int, int]] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in _PACK_FUNCS:
+                allowed_spans.append(
+                    (node.lineno, node.end_lineno or node.lineno))
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            if node.attr not in _LOW_PRECISION:
+                continue
+            line = node.lineno
+            if any(a <= line <= b for a, b in allowed_spans):
+                continue
+            out.append(module.finding(
+                self.id, node,
+                f"low-precision dtype '{dotted_name(node)}' in a core "
+                f"learning-state module outside the pack_*/packed_* "
+                f"serving boundary — learning state leaves are fp32 "
+                f"(DESIGN.md §8)"))
+        return out
+
+
+@register
+class InferPackMutationRule(Rule):
+    """``InferPack`` is a derived, immutable view: it is constructed by
+    ``pack_projection`` at fold boundaries and only ever *replaced*,
+    never edited in place — a field write would desynchronize served
+    weights from the fp32 state (stale int8 scales, dead tables)."""
+
+    id = "infer-pack-mutation"
+    contract = ("InferPack is constructed only in pack_projection and "
+                "its fields are never assignment targets")
+
+    _FIELDS = {"w", "b", "scale", "table"}
+
+    def check(self, module: Module) -> List[Finding]:
+        out: List[Finding] = []
+        # (a) constructor calls outside pack_projection
+        pack_spans: List[Tuple[int, int]] = []
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == "pack_projection":
+                pack_spans.append((node.lineno, node.end_lineno or node.lineno))
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call) and \
+                    dotted_name(node.func).split(".")[-1] == "InferPack":
+                if not any(a <= node.lineno <= b for a, b in pack_spans):
+                    out.append(module.finding(
+                        self.id, node,
+                        "InferPack constructed outside pack_projection — "
+                        "serving views are derived at fold boundaries "
+                        "only (DESIGN.md §8)"))
+        # (b) field stores on known packs: names assigned from
+        # pack_projection/pack_state, or any `<x>.pack.<field>` chain.
+        pack_vars: Set[str] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                callee = dotted_name(node.value.func).split(".")[-1]
+                if callee in ("pack_projection", "pack_state"):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            pack_vars.add(t.id)
+        for node in ast.walk(module.tree):
+            targets: Sequence[ast.AST] = ()
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = (node.target,)
+            for t in targets:
+                if not isinstance(t, ast.Attribute) or \
+                        t.attr not in self._FIELDS:
+                    continue
+                base = t.value
+                is_pack = (isinstance(base, ast.Name) and
+                           base.id in pack_vars) or \
+                          (isinstance(base, ast.Attribute) and
+                           base.attr == "pack")
+                if is_pack:
+                    out.append(module.finding(
+                        self.id, t,
+                        f"assignment to InferPack field '.{t.attr}' — "
+                        f"packs are immutable derived views; re-derive "
+                        f"with pack_projection/pack_state at a fold "
+                        f"boundary instead"))
+        return out

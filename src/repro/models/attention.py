@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..distributed.sharding import shard
+from ..kernels.tiling import NEG
 from .common import Params, dense_init, rms_norm, rope
 
 
@@ -85,7 +86,7 @@ def _chunk_attend(q_chunk, k, v, q_pos, k_pos, cfg: ModelConfig,
     # ADDITIVE mask, not where(): where()'s vjp saves the predicate at the
     # broadcast (B,H,G,C,S) shape per chunk; add's vjp saves nothing, and
     # the (C,S) where-pred below is batch-free (perf iteration §Perf-0).
-    scores = scores + jnp.where(mask, 0.0, -1e30)[None, None, None]
+    scores = scores + jnp.where(mask, 0.0, NEG)[None, None, None]
     probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
     out = jnp.einsum("bhgcs,bshd->bchgd", probs, v)
     return out
@@ -225,7 +226,7 @@ def decode_attend(params: Params, cfg: ModelConfig, x: jax.Array,
     scores = jnp.einsum("bhgd,bshd->bhgs", qh, k,
                         preferred_element_type=jnp.float32) * scale
     scores = _softcap(scores, cfg.attn_softcap)
-    scores = scores + jnp.where(valid, 0.0, -1e30)[None, None, None]
+    scores = scores + jnp.where(valid, 0.0, NEG)[None, None, None]
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhgs,bshd->bhgd", probs, v).reshape(b, 1, hq * hd)
     out = out @ params["wo"]

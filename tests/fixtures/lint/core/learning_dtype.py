@@ -1,0 +1,8 @@
+"""Known-bad: a low-precision dtype on a learning-state leaf inside a
+core/ module (trace increments alpha*x underflow in bf16 — DESIGN.md §8;
+only the pack_*/packed_* serving boundary may name these dtypes)."""
+import jax.numpy as jnp
+
+
+def update_trace(pi, x, alpha):
+    return ((1 - alpha) * pi + alpha * x).astype(jnp.bfloat16)  # BUG

@@ -1,0 +1,18 @@
+"""Known-bad: the PR 6 bug class — a buffer is read after being passed
+through ``donate_argnums`` (XLA owns it; ``.is_deleted()`` at best)."""
+import jax
+
+
+def train_step(state, batch):
+    return state
+
+
+step = jax.jit(train_step, donate_argnums=(0,))
+
+
+def train(state, batches):
+    for batch in batches:
+        new_state = step(state, batch)
+        loss = state.loss  # BUG: `state` was donated to `step` above
+        state = new_state
+    return state, loss

@@ -1,0 +1,8 @@
+"""Known-bad: mutating a packed serving view in place — served weights
+desynchronize from the fp32 state (stale int8 scales, dead tables)."""
+
+
+def refresh_scale(proj, pspec, new_scale):
+    pack = pack_projection(proj, pspec)  # noqa: F821 — AST fixture only
+    pack.scale = new_scale  # BUG: packs are immutable derived views
+    return pack

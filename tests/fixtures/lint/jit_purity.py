@@ -1,0 +1,11 @@
+"""Known-bad: host state read inside a jitted body — the value freezes
+at trace time and silently replays forever."""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    t0 = time.time()  # BUG: wall-clock inside a jitted trace
+    return x * t0

@@ -1,0 +1,7 @@
+"""Known-bad: hand-rolled softmax-lane fill (overflows to -inf on a
+bf16 cast; all-pad hypercolumns then softmax to NaN)."""
+import jax.numpy as jnp
+
+
+def masked_support(scores, mask):
+    return jnp.where(mask, scores, -1e30)  # BUG: use kernels.tiling.NEG

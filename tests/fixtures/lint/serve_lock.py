@@ -1,0 +1,16 @@
+"""Known-bad: an attribute the class mutates under ``self._lock`` is
+also written lock-free — the serve-telemetry race class."""
+import threading
+
+
+class Metrics:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def record(self):
+        with self._lock:
+            self._count += 1
+
+    def reset(self):
+        self._count = 0  # BUG: lock-guarded attribute written without it
