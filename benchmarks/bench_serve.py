@@ -13,6 +13,11 @@ Two sections:
   admission front under a 10:1 skewed Poisson mix, recording per-model
   images/s + p50/p99 and the minority completion share — the fairness
   surface the round-robin scheduler is designed for.
+* **Overload scenario** — capacity is probed with an unbounded queue,
+  then the same checkpoint is offered ~2x that rate behind a bounded
+  admission front (``max_queue`` + per-request deadline, DESIGN.md
+  §10), recording the shed/reject rates and the p99 of what was
+  actually served.
 * **Serving-dtype sweep** — ONE trained compact-patchy model served at
   capacity under each ``infer_dtype`` (fp32 / bf16 / int8, DESIGN.md
   §8): same checkpoint, same engine, only the packed inference weights
@@ -195,6 +200,71 @@ def bench_infer_dtype(dtypes=("fp32", "bf16", "int8"), rate: float = 1e5,
     return rows
 
 
+def bench_overload(side: int = 8, n_classes: int = 4,
+                   requests: int = 256, max_batch: int = 16,
+                   epochs: int = 2, seed: int = 0,
+                   backend: str = "pallas", max_queue: int = 32,
+                   deadline_ms: float = 250.0, csv: bool = True):
+    """Overload scenario (DESIGN.md §10): measure capacity with an
+    unbounded queue, then offer ~2x that rate against a BOUNDED engine
+    (``max_queue`` + per-request deadline) and record how the excess is
+    turned away — rejected at admission, shed at dequeue — and the p99
+    of what was actually served.  The point of the row: under 2x
+    saturation a bounded engine keeps served p99 near the deadline
+    instead of letting queueing latency grow without bound, at the cost
+    of an explicit shed/reject rate."""
+    ds = make_synthetic(512, 128, side, n_classes, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec = deep_synth_spec(side=side, depth=2, n_classes=n_classes,
+                           hidden_hc=8, hidden_mc=16, backend=backend)
+    tr = Trainer(spec, seed=seed)
+    tr.fit(xt, ds.y_train, epochs=epochs, batch=64)
+
+    # capacity probe: saturating offered rate, no admission bound
+    svc = BCPNNService(tr.state, spec, max_batch=max_batch)
+    svc.warmup()
+    svc.start(warmup=False)
+    rep0 = run_open_loop(svc, xe, ds.y_test, n_requests=requests,
+                         rate_hz=1e5, seed=seed)
+    svc.stop()
+    capacity_hz = rep0.achieved_rate_hz
+    offered_hz = 2.0 * capacity_hz
+
+    # same checkpoint behind a bounded front at 2x that capacity
+    svc = BCPNNService(tr.state, spec, max_batch=max_batch,
+                       max_queue=max_queue,
+                       default_deadline_s=deadline_ms / 1e3)
+    svc.warmup()
+    svc.start(warmup=False)
+    rep = run_open_loop(svc, xe, ds.y_test, n_requests=requests,
+                        rate_hz=offered_hz, seed=seed)
+    svc.stop()
+    snap = svc.snapshot()
+    offered = float(len(rep.results) + len(rep.errors) + rep.n_rejected)
+    row = {
+        "backend": backend,
+        "capacity_hz": capacity_hz,
+        "offered_hz": offered_hz,
+        "max_queue": max_queue,
+        "deadline_ms": deadline_ms,
+        "served": len(rep.results),
+        "rejected": rep.n_rejected,
+        "shed": snap["shed"],
+        "rejected_rate": rep.n_rejected / max(offered, 1.0),
+        "shed_rate": snap["shed"] / max(offered, 1.0),
+        "served_p50_ms": snap["p50_ms"],
+        "served_p99_ms": snap["p99_ms"],
+        "served_accuracy": rep.accuracy() if rep.results else 0.0,
+    }
+    if csv:
+        tag = "serve_overload_2x"
+        print(f"{tag},{row['capacity_hz']:.1f},capacity_hz")
+        print(f"{tag},{row['shed_rate']*100:.1f},shed_pct")
+        print(f"{tag},{row['rejected_rate']*100:.1f},rejected_pct")
+        print(f"{tag},{row['served_p99_ms']:.2f},served_p99_ms")
+    return row
+
+
 def run(csv=True, json_path="BENCH_serve.json", rates=(200.0, 1e5),
         backends=("jnp", "pallas"), requests=128,
         multi_rates=(400.0, 1e5), dtypes=("fp32", "bf16", "int8")):
@@ -205,8 +275,10 @@ def run(csv=True, json_path="BENCH_serve.json", rates=(200.0, 1e5),
                                    requests=max(requests, 256), csv=csv)
     dtype_rows = bench_infer_dtype(dtypes=dtypes, requests=requests,
                                    csv=csv)
+    overload_row = bench_overload(requests=max(requests, 256), csv=csv)
     summary = {"rows": rows, "multi_model": multi_rows,
                "infer_dtype": dtype_rows,
+               "overload": overload_row,
                "device": jax.default_backend()}
     if csv:
         print("bench_serve_json=" + json.dumps(summary))

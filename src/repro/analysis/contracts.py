@@ -263,6 +263,81 @@ def check_donation_guard() -> List[str]:
     return problems
 
 
+# --------------------------------------------- quarantine rollback ----
+
+def check_quarantine_rollback() -> List[str]:
+    """Live check of the serving quarantine contract (DESIGN.md §10): a
+    fold whose output fails the non-finite sentinel must (a) leave the
+    slot's state BIT-IDENTICAL to the last-good pre-fold state, (b) flip
+    the slot to inference-only (``Quarantined`` on feedback, surfaced in
+    ``snapshot()``), and (c) re-arm through ``revalidate()``."""
+    import time
+    import jax
+    import numpy as np
+    from ..core.network import init_network, make_network_spec
+    from ..serve.engine import BCPNNService
+    from ..serve.errors import Quarantined
+    from ..serve.faultinject import FaultInjector
+
+    spec = make_network_spec((2, 2), [(1, 4)], 2, backend="jnp")
+    state = init_network(spec, jax.random.PRNGKey(0))
+    # fold invocation 0 stays clean (establishes a non-trivial last-good
+    # snapshot), invocation 1 is corrupted; feedback_eager=False makes
+    # the invocation -> batch-composition mapping deterministic (folds
+    # fire only on FULL feedback batches, never on idle polls)
+    inj = FaultInjector(seed=0, schedule={"nan-state": {1}})
+    svc = BCPNNService(state, spec, buckets=(1, 2), max_wait_ms=0.5,
+                       online_learning=True, feedback_batch=2,
+                       feedback_eager=False, fault_injector=inj)
+    problems: List[str] = []
+    svc.start(warmup=True)
+    try:
+        rng = np.random.default_rng(0)
+        ni = spec.input_geom.N
+        deadline = time.perf_counter() + 30.0
+        for i in range(2):
+            svc.feedback(rng.random(ni).astype(np.float32), i % 2)
+        while svc.snapshot()["learn_steps"] < 1:
+            if time.perf_counter() > deadline:
+                problems.append("clean fold never landed")
+                return problems
+            time.sleep(0.002)
+        good = jax.tree_util.tree_map(np.asarray, svc._slot(None).state)
+        # the corrupted fold: must quarantine, not commit
+        for i in range(2):
+            svc.feedback(rng.random(ni).astype(np.float32), i % 2)
+        while not svc._slot(None).quarantined:
+            if time.perf_counter() > deadline:
+                problems.append("nan-injected fold never quarantined")
+                return problems
+            time.sleep(0.002)
+        after = jax.tree_util.tree_map(np.asarray, svc._slot(None).state)
+        flat_g = jax.tree_util.tree_leaves(good)
+        flat_a = jax.tree_util.tree_leaves(after)
+        for g, a in zip(flat_g, flat_a):
+            if g.dtype != a.dtype or not np.array_equal(g, a):
+                problems.append(
+                    "quarantine rollback is not bit-identical to the "
+                    "last-good state — a corrupted fold leaked into the "
+                    "served state")
+                break
+        if svc.snapshot().get("quarantined") != 1.0:
+            problems.append("quarantine not surfaced in snapshot()")
+        try:
+            svc.feedback(rng.random(ni).astype(np.float32), 0)
+            problems.append("quarantined slot accepted feedback "
+                            "(expected Quarantined)")
+        except Quarantined:
+            pass
+        svc.revalidate()
+        if svc._slot(None).quarantined:
+            problems.append("revalidate() failed to re-arm a finite "
+                            "rolled-back slot")
+    finally:
+        svc.stop()
+    return problems
+
+
 # -------------------------------------------------------------- driver ----
 
 CONTRACTS: Dict[str, Callable[[], List[str]]] = {
@@ -270,6 +345,7 @@ CONTRACTS: Dict[str, Callable[[], List[str]]] = {
     "recompile-sentinel": check_recompile_sentinel,
     "dp-seams": check_dp_seams,
     "pallas-plans": check_pallas_plans,
+    "quarantine-rollback": check_quarantine_rollback,
 }
 
 

@@ -340,6 +340,86 @@ def _mutations_of_body(body: List[ast.stmt]) -> List[_Mutation]:
     return out
 
 
+# ====================================================== serve-except sinks --
+
+
+_EXC_SINKS = {
+    # supervision sinks: counting or completing is NOT swallowing
+    "record_crash", "_note_crash", "_die",
+    "_fail_request", "_fail_requests", "_finish_exceptionally",
+}
+
+
+def _catches_broadly(handler: ast.ExceptHandler) -> bool:
+    """True for ``except:``, ``except Exception`` and
+    ``except BaseException`` (any dotted spelling, incl. tuples)."""
+    t = handler.type
+    if t is None:
+        return True
+    parts = t.elts if isinstance(t, ast.Tuple) else [t]
+    for p in parts:
+        name = dotted_name(p).split(".")[-1]
+        if name in ("Exception", "BaseException"):
+            return True
+    return False
+
+
+def _handler_discharges(handler: ast.ExceptHandler) -> bool:
+    """True if the handler re-raises, completes a request future
+    (``.error`` assignment / ``done.set()``), or calls a supervision
+    sink that does."""
+    for n in ast.walk(handler):
+        if isinstance(n, ast.Raise):
+            return True
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Attribute) and t.attr == "error":
+                    return True
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute):
+            if n.func.attr in _EXC_SINKS:
+                return True
+            if n.func.attr == "set" and \
+                    isinstance(n.func.value, ast.Attribute) and \
+                    n.func.value.attr == "done":
+                return True
+    return False
+
+
+@register
+class ServeExceptRule(Rule):
+    """The serving worker survives exceptions BY DESIGN — but a broad
+    handler that neither re-raises, completes the affected futures, nor
+    routes through a supervision sink turns a crash into a silent hang:
+    the caller blocks in ``result()`` forever on a request nobody will
+    ever finish (the exact hazard the PR 8 supervision rework removes).
+    """
+
+    id = "serve-except"
+    contract = ("an `except Exception`/bare handler under serve/ must "
+                "re-raise, complete futures (.error / done.set()), or "
+                "call a supervision sink (record_crash/_note_crash/"
+                "_fail_*/_die)")
+
+    def check(self, module: Module) -> List[Finding]:
+        if "serve/" not in module.path.replace("\\", "/"):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _catches_broadly(node):
+                continue
+            if _handler_discharges(node):
+                continue
+            out.append(module.finding(
+                self.id, node,
+                "broad exception handler swallows the error without "
+                "re-raising, completing request futures, or recording "
+                "the crash — a supervised serving path must discharge "
+                "every exception (DESIGN.md §10)"))
+        return out
+
+
 # ============================================================= jit-purity --
 
 

@@ -30,14 +30,20 @@ class StepTimer:
     def start(self):
         self._t0 = time.perf_counter()
 
-    def stop(self, step: int) -> float:
+    def stop(self, step: int, tag: Optional[str] = None) -> float:
+        """Close the started window; ``tag`` attributes the step to an
+        owner (the serving engine passes the model name, so an injected
+        or genuine straggler batch names WHOSE microbatch stalled)."""
         dt = time.perf_counter() - self._t0
         hist = self._times[-self.window:]
         if len(hist) >= 8:
             med = float(np.median(hist))
             mad = float(np.median(np.abs(np.asarray(hist) - med))) + 1e-9
             if dt > med + self.threshold * 1.4826 * mad:
-                self.events.append({"step": step, "time": dt, "median": med})
+                ev = {"step": step, "time": dt, "median": med}
+                if tag is not None:
+                    ev["tag"] = tag
+                self.events.append(ev)
         self._times.append(dt)
         return dt
 

@@ -45,11 +45,23 @@ from ..serve import BCPNNService, StreamSpec, run_multi_open_loop, run_open_loop
 
 
 def _report(tag: str, snap: dict, extra: str = "") -> None:
+    robust = ""
+    if snap.get("rejected") or snap.get("shed") or snap.get("failed"):
+        robust = (f", {snap['rejected']:.0f} rejected / "
+                  f"{snap['shed']:.0f} shed / {snap['failed']:.0f} failed")
     print(f"[serve-bcpnn] {tag}: {snap['completed']:.0f}/"
           f"{snap['submitted']:.0f} served, {snap['images_per_s']:.1f} img/s, "
           f"p50 {snap['p50_ms']:.1f}ms p99 {snap['p99_ms']:.1f}ms, "
           f"batch occupancy {snap['batch_occupancy']*100:.0f}%, "
-          f"{snap['learn_steps']:.0f} learn steps{extra}")
+          f"{snap['learn_steps']:.0f} learn steps{robust}{extra}")
+
+
+def _accounted(snap: dict) -> bool:
+    """Robustness-aware availability check: every admitted request must
+    have RESOLVED (served, shed on deadline, or failed typed) — nothing
+    silently dropped."""
+    return (snap["completed"] + snap["shed"] + snap["failed"]
+            == snap["submitted"])
 
 
 def _pool_for(spec, n: int, seed: int):
@@ -71,6 +83,10 @@ def _pool_for(spec, n: int, seed: int):
     return x, y
 
 
+def _deadline_s(args):
+    return args.deadline_ms * 1e-3 if args.deadline_ms is not None else None
+
+
 def serve_checkpoints(args) -> None:
     """--ckpt mode: host every given checkpoint dir in one engine and
     drive a uniform-rate multi-model mix."""
@@ -79,7 +95,8 @@ def serve_checkpoints(args) -> None:
         models, max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
         online_learning=not args.no_online, learn_stack=args.learn_stack,
         feedback_batch=args.feedback_batch,
-        infer_dtype=args.infer_dtype).start()
+        infer_dtype=args.infer_dtype, max_queue=args.max_queue,
+        default_deadline_s=_deadline_s(args)).start()
     streams = {}
     for i, (name, (_, spec)) in enumerate(models.items()):
         x, y = _pool_for(spec, max(64, args.requests), args.seed + i)
@@ -137,6 +154,15 @@ def main():
                     help="offered open-loop arrival rate (req/s)")
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request queueing deadline: requests still "
+                         "queued past it are shed (DeadlineExceeded) "
+                         "before any compute; default = no deadline")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="per-model admission-queue bound: submits past "
+                         "it are rejected with a typed Overloaded "
+                         "instead of queueing unboundedly; default = "
+                         "unbounded")
     ap.add_argument("--no-online", action="store_true",
                     help="skip the online-learning phase")
     ap.add_argument("--no-multi", action="store_true",
@@ -210,7 +236,9 @@ def main():
     # ---- phase 2: inference-only serving --------------------------------
     svc = BCPNNService(state, spec, max_batch=args.max_batch,
                        max_wait_ms=args.max_wait_ms,
-                       infer_dtype=args.infer_dtype).start()
+                       infer_dtype=args.infer_dtype,
+                       max_queue=args.max_queue,
+                       default_deadline_s=_deadline_s(args)).start()
     rep = run_open_loop(svc, xe, ds.y_test, n_requests=args.requests,
                         rate_hz=args.rate, seed=args.seed)
     svc.stop()
@@ -218,7 +246,9 @@ def main():
     _report("inference", snap,
             extra=f", served accuracy {rep.accuracy()*100:.1f}%")
     if args.smoke:
-        assert snap["completed"] == snap["submitted"], "dropped requests"
+        assert _accounted(snap), f"requests silently dropped: {snap}"
+        if args.deadline_ms is None and args.max_queue is None:
+            assert snap["completed"] == snap["submitted"], "dropped requests"
         assert snap["p99_ms"] > 0, "no latency recorded"
 
     # ---- phase 3: online learning under live traffic --------------------
@@ -231,7 +261,9 @@ def main():
                             max_wait_ms=args.max_wait_ms,
                             online_learning=True,
                             feedback_batch=args.feedback_batch,
-                            infer_dtype=args.infer_dtype).start()
+                            infer_dtype=args.infer_dtype,
+                            max_queue=args.max_queue,
+                            default_deadline_s=_deadline_s(args)).start()
         rep2 = run_open_loop(svc2, xe, ds.y_test, n_requests=args.requests,
                              rate_hz=args.rate, seed=args.seed + 1,
                              feedback_frac=args.feedback_frac,
@@ -249,8 +281,10 @@ def main():
               f"(trained baseline {acc_base*100:.1f}%)")
 
         if args.smoke:
-            assert snap2["completed"] == snap2["submitted"], \
-                "online learning degraded availability (dropped requests)"
+            assert _accounted(snap2), f"requests silently dropped: {snap2}"
+            if args.deadline_ms is None and args.max_queue is None:
+                assert snap2["completed"] == snap2["submitted"], \
+                    "online learning degraded availability (dropped requests)"
             assert snap2["learn_steps"] > 0, "no learn steps folded"
             # Recovery is bounded by what the frozen representation
             # supports: require the online readout to close a third of the
@@ -282,7 +316,9 @@ def main():
             {"dense": (state, spec), "patchy": (tr_p.state, spec_p)},
             max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
             online_learning=True, learn_stack=True,
-            feedback_batch=8, infer_dtype=args.infer_dtype).start()
+            feedback_batch=8, infer_dtype=args.infer_dtype,
+            max_queue=args.max_queue,
+            default_deadline_s=_deadline_s(args)).start()
         reports = run_multi_open_loop(
             msvc,
             {"dense": StreamSpec(xe, ds.y_test, rate_hz=args.rate),
@@ -300,8 +336,10 @@ def main():
         served_p = msvc.model_state("patchy")
         t_after = int(served_p.projs[0].traces.t)
         msvc.revalidate()  # mask/table invariants hold after rewires
-        assert msnap["completed"] == msnap["submitted"], \
-            "multi-model serving dropped requests"
+        assert _accounted(msnap), f"requests silently dropped: {msnap}"
+        if args.deadline_ms is None and args.max_queue is None:
+            assert msnap["completed"] == msnap["submitted"], \
+                "multi-model serving dropped requests"
         for name, rep_m in reports.items():
             assert len(rep_m.results) > 0, f"model {name!r} starved"
         assert msnap["per_model"]["patchy"]["learn_steps"] >= 6, msnap

@@ -1,14 +1,24 @@
 """Serving subsystem: multi-model microbatched streaming inference +
 in-deployment online learning for trained deep BCPNN networks
-(DESIGN.md §6)."""
+(DESIGN.md §6), with a typed robustness ladder — admission control,
+deadlines/load-shedding, worker supervision, learning-state quarantine —
+and a deterministic fault-injection harness (DESIGN.md §10)."""
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .engine import BCPNNService, ServeResult, cycle_batch
+from .errors import (
+    DeadlineExceeded, FaultInjected, Overloaded, Quarantined, ServeError,
+    WorkerDied,
+)
+from .faultinject import POINTS, Fault, FaultInjector
 from .loadgen import LoadReport, StreamSpec, run_multi_open_loop, run_open_loop
 from .metrics import ServeMetrics
 
 __all__ = [
     "MicroBatcher", "Request", "default_buckets", "pad_group", "pick_bucket",
     "BCPNNService", "ServeResult", "cycle_batch",
+    "ServeError", "Overloaded", "DeadlineExceeded", "WorkerDied",
+    "Quarantined", "FaultInjected",
+    "POINTS", "Fault", "FaultInjector",
     "LoadReport", "StreamSpec", "run_multi_open_loop", "run_open_loop",
     "ServeMetrics",
 ]

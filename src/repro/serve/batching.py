@@ -20,6 +20,8 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .errors import Overloaded
+
 
 def default_buckets(max_batch: int) -> Tuple[int, ...]:
     """Powers of two up to ``max_batch`` (always including it)."""
@@ -63,18 +65,40 @@ class Request:
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[Any] = None  # ServeResult once completed
     error: Optional[BaseException] = None
+    # Absolute perf_counter deadline (None = no deadline).  Checked at
+    # dequeue time: an expired request is shed BEFORE padding/compute and
+    # completed with DeadlineExceeded — device time is never spent on a
+    # result nobody is waiting for.
+    deadline_t: Optional[float] = None
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_t is not None and now > self.deadline_t
 
 
 class MicroBatcher:
-    """Admission queue that hands the engine bucket-sized request groups."""
+    """Admission queue that hands the engine bucket-sized request groups.
 
-    def __init__(self, buckets: Sequence[int], max_wait_s: float = 2e-3):
+    ``max_depth`` bounds the queue: ``put`` raises a typed ``Overloaded``
+    once the bound is reached (admission control — an unbounded queue
+    converts overload into unbounded latency instead of fast rejection;
+    None keeps the legacy unbounded behavior)."""
+
+    def __init__(self, buckets: Sequence[int], max_wait_s: float = 2e-3,
+                 max_depth: Optional[int] = None):
+        if max_depth is not None and max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self.buckets = tuple(sorted(buckets))
         self.max_batch = self.buckets[-1]
         self.max_wait_s = max_wait_s
+        self.max_depth = max_depth
         self._q: "queue.Queue[Request]" = queue.Queue()
 
     def put(self, req: Request) -> None:
+        # qsize() is exact here: the engine admits under one lock, and a
+        # concurrent worker dequeue only makes the queue SHORTER — the
+        # bound can never be overshot, only momentarily under-filled.
+        if self.max_depth is not None and self._q.qsize() >= self.max_depth:
+            raise Overloaded(req.model, self._q.qsize(), self.max_depth)
         self._q.put(req)
 
     def depth(self) -> int:

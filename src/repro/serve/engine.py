@@ -34,6 +34,21 @@ shape-bucketed microbatches:
     bit-reproducible against an offline replay of the same feedback
     batches.
 
+  * **Robustness ladder** (DESIGN.md §10): bounded per-model admission
+    queues (``max_queue`` -> typed ``Overloaded`` rejection), per-request
+    deadlines (``submit(deadline_s=...)``; expired requests are shed at
+    dequeue time BEFORE padding/compute and resolve with
+    ``DeadlineExceeded``), a supervised worker loop (fold/infer/adapt
+    exceptions are counted and survived, never fatal; a group-level
+    infer failure bisects the microbatch so one poison request resolves
+    exceptionally while its groupmates still serve), learning-state
+    quarantine (a non-finite post-fold state rolls back to the last-good
+    snapshot and degrades the slot to inference-only until
+    ``revalidate()``), and dead-worker detection (``submit``/``result``/
+    ``stop`` raise ``WorkerDied`` instead of hanging if the worker
+    thread ever exits abnormally — every pending future is completed
+    exceptionally on the way down).
+
 Thread model: ``submit``/``feedback`` may be called from any thread (they
 only enqueue host arrays); all device work — inference and learning —
 happens on the single worker thread, so no model state needs a lock and
@@ -57,7 +72,12 @@ from ..core.network import (
     as_spec, infer_packed, online_learn_step, pack_state,
     supervised_readout_step,
 )
+from ..distributed.fault import StepTimer
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
+from .errors import (
+    DeadlineExceeded, Overloaded, Quarantined, WorkerDied,
+)
+from .faultinject import FaultInjector
 from .metrics import ServeMetrics
 
 DEFAULT_MODEL = "default"
@@ -103,6 +123,13 @@ class _ModelSlot:
     feedback: collections.deque
     target_bucket: int               # adaptive active bucket (worker only)
     pack: Any = None                 # InferParams derived at fold boundaries
+    # Learning-state quarantine (worker thread only).  ``last_good`` is
+    # the newest state that passed the post-fold non-finite sentinel; a
+    # failing fold rolls back to it and flips ``quarantined`` — the slot
+    # keeps SERVING from the last-good pack but accepts no feedback
+    # until revalidate() re-arms it.
+    last_good: Any = None
+    quarantined: bool = False
 
     def repack(self) -> None:
         """Re-derive the serving-dtype inference weights from the fp32
@@ -129,6 +156,20 @@ def _validate_state(state, spec, name: str) -> None:
                           where=f"model {name!r} readout")
 
 
+def _state_finite(state) -> bool:
+    """Cheap post-fold sentinel: True iff every float leaf of the state
+    pytree (traces, weights, biases — everything a diverged fold could
+    poison) is finite.  One fused all-reduce per leaf, a dozen leaves per
+    fold — noise next to the learn step itself."""
+    flags = [jnp.all(jnp.isfinite(leaf))
+             for leaf in jax.tree_util.tree_leaves(state)
+             if hasattr(leaf, "dtype")
+             and jnp.issubdtype(leaf.dtype, jnp.floating)]
+    if not flags:
+        return True
+    return bool(jnp.stack(flags).all())
+
+
 class BCPNNService:
     """Microbatched streaming front-end over trained ``DeepState``s.
 
@@ -149,10 +190,21 @@ class BCPNNService:
                  poll_ms: float = 20.0, result_retention: int = 4096,
                  learn_stack: bool = False, adaptive_buckets: bool = True,
                  feedback_eager: bool = True, name: str = DEFAULT_MODEL,
-                 infer_dtype: Optional[str] = None):
+                 infer_dtype: Optional[str] = None,
+                 max_queue: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         if infer_dtype is not None and infer_dtype not in INFER_DTYPES:
             raise ValueError(f"infer_dtype must be one of {INFER_DTYPES}, "
                              f"got {infer_dtype!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        # Admission control: per-model queue bound (Overloaded past it)
+        # and the engine-wide default deadline stamped on every submit
+        # that does not carry its own (None = no deadline).
+        self.max_queue = max_queue
+        self.default_deadline_s = default_deadline_s
+        self.fault_injector = fault_injector
         # Engine-wide serving-precision override: when set, every hosted
         # model's spec is re-tagged with this infer_dtype at registration
         # (None = honor each spec/checkpoint's own tag).  Learning state
@@ -196,6 +248,20 @@ class BCPNNService:
         # for a straggler to land in a dead queue.
         self._admit_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
+        # Worker supervision state.  ``_dead`` flips (under the admission
+        # lock) only if the worker thread exits abnormally; from then on
+        # submit/feedback/result/stop raise WorkerDied instead of
+        # hanging, and every future pending at death completes
+        # exceptionally.  ``_last_crash`` is the newest SURVIVED
+        # exception (supervised: counted, never fatal).
+        self._dead = threading.Event()
+        self._worker_error: Optional[BaseException] = None
+        self._last_crash: Optional[BaseException] = None
+        # Per-microbatch wall times feed the shared straggler detector;
+        # stop(tag=model) attributes outlier batches (injected slow-batch
+        # faults included) to the slot that stalled.
+        self.step_timer = StepTimer()
+        self._batch_seq = 0
         self.add_model(name, state, spec_or_cfg)
 
     @classmethod
@@ -240,11 +306,13 @@ class BCPNNService:
                                supervised_readout_step(st, _spec, x, y))
         self._slots[name] = _ModelSlot(
             name=name, state=state, spec=spec,
-            batcher=MicroBatcher(self._buckets, max_wait_s=self._max_wait_s),
+            batcher=MicroBatcher(self._buckets, max_wait_s=self._max_wait_s,
+                                 max_depth=self.max_queue),
             metrics=ServeMetrics(window=self.metrics_window),
             infer_fn=infer_fn, learn_fn=learn_fn,
             feedback=collections.deque(),
             target_bucket=self._buckets[-1],
+            last_good=state,
         )
         self._slots[name].repack()
         self._order.append(name)
@@ -282,9 +350,15 @@ class BCPNNService:
     def revalidate(self) -> None:
         """Re-run the deployment-boundary patchy/compact invariants on the
         CURRENT states — cheap (vectorized host check), useful after a
-        run with in-deployment rewires."""
+        run with in-deployment rewires.  Additionally re-arms any
+        quarantined slot whose current (rolled-back) state is finite:
+        quarantine is a degradation, not a death sentence — an operator
+        (or a test) calls revalidate() to resume learning from the
+        last-good snapshot."""
         for slot in self._slots.values():
             _validate_state(slot.state, slot.spec, slot.name)
+            if slot.quarantined and _state_finite(slot.state):
+                slot.quarantined = False
 
     # --------------------------------------- single-model back-compat -----
     @property
@@ -317,6 +391,9 @@ class BCPNNService:
     def start(self, warmup: bool = True) -> "BCPNNService":
         if self._thread is not None:
             raise RuntimeError("service already started")
+        if self._dead.is_set():
+            raise WorkerDied(f"service worker died and cannot be "
+                             f"restarted: {self._worker_error!r}")
         if warmup:
             self.warmup()
         self._stop.clear()
@@ -325,17 +402,33 @@ class BCPNNService:
         self._thread.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, timeout_s: float = 60.0) -> None:
         """Drain: the worker finishes everything already admitted (requests
         and feedback) before exiting; admissions racing stop() either land
-        before the flag flips (and are served) or raise."""
+        before the flag flips (and are served) or raise.
+
+        Never hangs silently: the join is bounded by ``timeout_s`` (a
+        wedged worker raises RuntimeError naming the last survived
+        crash), and a worker that died abnormally raises ``WorkerDied``
+        naming its terminal exception instead of returning as if the
+        drain succeeded."""
         if self._thread is None:
             return
         with self._admit_lock:
             self._stop.set()
             self._work.set()
-        self._thread.join()
+        self._thread.join(timeout_s)
+        alive = self._thread.is_alive()
         self._thread = None
+        if alive:
+            hint = (f" (last survived crash: {self._last_crash!r})"
+                    if self._last_crash is not None else "")
+            raise RuntimeError(f"serving worker failed to drain within "
+                               f"{timeout_s}s{hint}")
+        if self._worker_error is not None:
+            raise WorkerDied(f"serving worker died: "
+                             f"{type(self._worker_error).__name__}: "
+                             f"{self._worker_error}")
 
     def warmup(self) -> None:
         """Pre-compile every (model, bucket) shape (and the learn shapes)
@@ -355,23 +448,48 @@ class BCPNNService:
                 jax.block_until_ready(st.readout.w)  # discard: compile only
 
     # ---------------------------------------------------------- front-end --
-    def submit(self, x: np.ndarray, model: Optional[str] = None) -> int:
+    def submit(self, x: np.ndarray, model: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Admit one sample ((N,) encoded rates); returns a request id.
-        Multi-model services route by ``model`` name."""
+        Multi-model services route by ``model`` name.
+
+        ``deadline_s`` (or the engine's ``default_deadline_s``) bounds
+        how long the request may WAIT: if it is still queued past the
+        deadline it is shed at dequeue time and ``result`` raises
+        ``DeadlineExceeded``.  A full admission queue (``max_queue``)
+        raises ``Overloaded`` here instead of admitting — the request is
+        never registered, so rejection is O(1) and allocation-free for
+        the engine."""
         slot = self._slot(model)
         with self._admit_lock:
-            if self._thread is None or self._stop.is_set():
-                raise RuntimeError("service is not running")
+            self._check_alive()
+            d = self.default_deadline_s if deadline_s is None else deadline_s
+            now = time.perf_counter()
             with self._requests_lock:
                 rid = self._next_id
                 self._next_id += 1
                 req = Request(id=rid, x=np.asarray(x, np.float32),
-                              enqueue_t=time.perf_counter(), model=slot.name)
+                              enqueue_t=now, model=slot.name,
+                              deadline_t=(now + d) if d is not None else None)
                 self._requests[rid] = req
-            slot.metrics.record_submit()
-            slot.batcher.put(req)
+            try:
+                slot.batcher.put(req)
+            except Overloaded:
+                with self._requests_lock:
+                    self._requests.pop(rid, None)
+                slot.metrics.record_rejected()
+                raise
+            slot.metrics.record_submit(now=now)
             self._work.set()
         return rid
+
+    def _check_alive(self) -> None:
+        """Admission-side liveness gate (call under ``_admit_lock``)."""
+        if self._dead.is_set():
+            raise WorkerDied(f"service worker is dead: "
+                             f"{self._worker_error!r}")
+        if self._thread is None or self._stop.is_set():
+            raise RuntimeError("service is not running")
 
     def result(self, request_id: int, timeout: Optional[float] = None) -> ServeResult:
         """Block until ``request_id`` completes and return its result.
@@ -379,13 +497,31 @@ class BCPNNService:
         The id is forgotten on return AND on timeout — a timed-out request
         still executes (its work is already admitted) but the result is
         discarded, so abandoned requests cannot leak registry entries.
+
+        Shed, rejected-at-source or failed requests re-raise their typed
+        error here (``DeadlineExceeded``, infer failure, ...).  A worker
+        that dies mid-wait completes every pending future with
+        ``WorkerDied`` on its way down, so this never hangs on a dead
+        service; the bounded wait slices below are belt-and-braces for a
+        death racing registration.
         """
         with self._requests_lock:
             req = self._requests[request_id]
         try:
-            if not req.done.wait(timeout):
-                raise TimeoutError(f"request {request_id} not done "
-                                   f"within {timeout}s")
+            end = (time.perf_counter() + timeout
+                   if timeout is not None else None)
+            while not req.done.wait(
+                    0.2 if end is None
+                    else max(0.0, min(0.2, end - time.perf_counter()))):
+                if req.done.is_set():
+                    break
+                if self._dead.is_set():
+                    raise WorkerDied(f"request {request_id} abandoned: "
+                                     f"worker died "
+                                     f"({self._worker_error!r})")
+                if end is not None and time.perf_counter() >= end:
+                    raise TimeoutError(f"request {request_id} not done "
+                                       f"within {timeout}s")
         finally:
             with self._requests_lock:
                 self._requests.pop(request_id, None)
@@ -400,13 +536,17 @@ class BCPNNService:
 
     def feedback(self, x: np.ndarray, label: int,
                  model: Optional[str] = None) -> None:
-        """Queue one labeled sample for the online-learning mode."""
+        """Queue one labeled sample for the online-learning mode.  A
+        quarantined slot raises ``Quarantined`` — it still serves
+        inference from its last-good state, but learning stays off until
+        ``revalidate()`` re-arms it."""
         if not self.online_learning:
             raise RuntimeError("service was built with online_learning=False")
         slot = self._slot(model)
         with self._admit_lock:
-            if self._thread is None or self._stop.is_set():
-                raise RuntimeError("service is not running")
+            self._check_alive()
+            if slot.quarantined:
+                raise Quarantined(slot.name)
             slot.feedback.append((np.asarray(x, np.float32), int(label)))
             self._work.set()
 
@@ -430,36 +570,87 @@ class BCPNNService:
             slot = self._slot(model)
             out = slot.metrics.snapshot(queue_depth=slot.batcher.depth())
             out["target_bucket"] = float(slot.target_bucket)
+            out["quarantined"] = 1.0 if slot.quarantined else 0.0
+            out["straggler_events"] = float(
+                sum(1 for e in self.step_timer.events
+                    if e.get("tag") == slot.name))
             return out
         if len(self._slots) == 1:
             return self.snapshot(model=self._order[0])
         out = ServeMetrics.aggregate(
             (s.metrics for s in self._slots.values()),
             queue_depth=self.queue_depth())
+        out["quarantined"] = float(
+            sum(1 for s in self._slots.values() if s.quarantined))
+        out["straggler_events"] = float(len(self.step_timer.events))
         out["per_model"] = {name: self.snapshot(model=name)
                             for name in self._order}
         return out
 
     # ------------------------------------------------------------- worker --
     def _run(self) -> None:
+        # Outermost supervision: _serve_loop survives every Exception on
+        # its own; anything that still escapes (KeyboardInterrupt, a
+        # MemoryError, a bug in the supervisor itself) must not strand
+        # the callers blocked in result() — _die completes every pending
+        # future with WorkerDied and flips the dead flag so later
+        # admissions fail fast instead of queueing into the void.
+        try:
+            self._serve_loop()
+        except BaseException as e:
+            self._die(e)
+            raise
+
+    def _serve_loop(self) -> None:
         while True:
-            group, slot = self._next_work()
-            if group:
-                self._execute(slot, group)
-            if self.online_learning:
-                # Fold between microbatches: immediately when a full learn
-                # batch is buffered, opportunistically when idle (eager
-                # mode only).
-                self._fold_feedback(
-                    force=(not group) and self.feedback_eager)
-            if self._stop.is_set() and not group \
-                    and all(s.batcher.depth() == 0
-                            for s in self._slots.values()):
-                while self.online_learning \
-                        and any(s.feedback for s in self._slots.values()):
-                    # flush EVERY model's buffer, one learn batch at a time
-                    self._fold_feedback(force=True)
-                return
+            group = []
+            try:
+                group, slot = self._next_work()
+                if group:
+                    self._execute(slot, group)
+                if self.online_learning:
+                    # Fold between microbatches: immediately when a full
+                    # learn batch is buffered, opportunistically when
+                    # idle (eager mode only).
+                    self._fold_feedback(
+                        force=(not group) and self.feedback_eager)
+                if self._stop.is_set() and not group \
+                        and all(s.batcher.depth() == 0
+                                for s in self._slots.values()):
+                    while self.online_learning \
+                            and any(s.feedback for s in self._slots.values()):
+                        # flush EVERY model's buffer, one batch at a time
+                        self._fold_feedback(force=True)
+                    return
+            except Exception as e:
+                # Supervised: scheduler/adapt/metrics bugs are counted
+                # and survived (the request-completing paths below have
+                # their own containment, so nothing admitted is lost).
+                self._note_crash(e)
+                time.sleep(self._poll_s)  # never hot-spin a crash loop
+
+    def _note_crash(self, e: Exception) -> None:
+        """Count one survived worker exception.  Attribution: scheduler-
+        level crashes have no owning slot, so they land in the first
+        slot's registry — aggregate accounting stays closed either way."""
+        self._last_crash = e
+        self._slots[self._order[0]].metrics.record_crash()
+
+    def _die(self, exc: BaseException) -> None:
+        """Terminal path: record the killer, flip the dead flag under the
+        admission gate (no new request can land after it), and complete
+        every pending future exceptionally so no caller hangs."""
+        self._worker_error = exc
+        err = WorkerDied(f"serving worker died: "
+                         f"{type(exc).__name__}: {exc}")
+        with self._admit_lock:
+            self._dead.set()
+            with self._requests_lock:
+                pending = [r for r in self._requests.values()
+                           if not r.done.is_set()]
+            for r in pending:
+                r.error = err
+                r.done.set()
 
     def _next_work(self) -> Tuple[List[Request], Optional[_ModelSlot]]:
         """Fair scheduler: scan slots round-robin from the cursor, serve
@@ -479,10 +670,51 @@ class BCPNNService:
                             else None))
                 if group:
                     self._cursor = (self._cursor + i + 1) % n
-                    return group, slot
+                    live = self._shed_expired(slot, group)
+                    if not live:
+                        # whole group expired; rescan from the advanced
+                        # cursor on the next loop pass
+                        return [], None
+                    return live, slot
         self._work.wait(self._poll_s)
         self._work.clear()
         return [], None
+
+    def _shed_expired(self, slot: _ModelSlot,
+                      group: List[Request]) -> List[Request]:
+        """Load shedding at the dequeue boundary: requests whose deadline
+        passed while queued complete with ``DeadlineExceeded`` NOW —
+        before padding and compute — so an overloaded engine spends
+        device time only on results somebody is still waiting for."""
+        now = time.perf_counter()
+        live = [r for r in group if not r.expired(now)]
+        n_shed = len(group) - len(live)
+        if n_shed:
+            slot.metrics.record_shed(n_shed)
+            for r in group:
+                if r.expired(now):
+                    self._finish_exceptionally(
+                        r, DeadlineExceeded(r.id,
+                                            r.deadline_t - r.enqueue_t,
+                                            now - r.enqueue_t))
+        return live
+
+    def _finish_exceptionally(self, r: Request,
+                              exc: BaseException) -> None:
+        """Complete one request's future with a typed error (no-op if it
+        already resolved) and keep the done-id retention window tight."""
+        if r.done.is_set():
+            return
+        r.error = exc
+        r.done.set()
+        self._done_ids.append(r.id)
+        self._evict_done()
+
+    def _evict_done(self) -> None:
+        while len(self._done_ids) > self.result_retention:
+            stale = self._done_ids.popleft()  # usually already collected
+            with self._requests_lock:
+                self._requests.pop(stale, None)
 
     def _adapt(self, slot: _ModelSlot) -> None:
         """Re-derive the slot's active bucket from its observed windows:
@@ -499,18 +731,50 @@ class BCPNNService:
         slot.target_bucket = pick_bucket(n, self._buckets)
 
     def _execute(self, slot: _ModelSlot, group: List[Request]) -> None:
-        bucket = pick_bucket(len(group), self._buckets)
-        x, valid = pad_group([r.x for r in group], bucket)
+        """Supervised microbatch execution with poison bisection.
+
+        A request handed to _execute ALWAYS resolves.  A group-level
+        infer failure splits the group and retries each half (recursion
+        depth log2(max_batch)): a single poison request costs O(log n)
+        retry batches and resolves exceptionally ALONE — its groupmates
+        still get genuine results instead of inheriting its error, and
+        a transient failure simply succeeds on retry."""
         try:
+            self._infer_group(slot, group)
+        except Exception as e:
+            slot.metrics.record_crash()
+            if len(group) == 1:
+                slot.metrics.record_failed()
+                self._finish_exceptionally(group[0], e)
+                return
+            slot.metrics.record_bisect()
+            mid = len(group) // 2
+            self._execute(slot, group[:mid])
+            self._execute(slot, group[mid:])
+
+    def _infer_group(self, slot: _ModelSlot, group: List[Request]) -> None:
+        """One padded forward + completion sweep (raises on failure; the
+        caller owns containment)."""
+        bucket = pick_bucket(len(group), self._buckets)
+        inj = self.fault_injector
+        self._batch_seq += 1
+        self.step_timer.start()
+        try:
+            if inj is not None:
+                f = inj.maybe("slow-batch")
+                if f is not None:
+                    time.sleep(f.delay_s)  # injected straggler
+                inj.check_group([r.id for r in group])
+                inj.raise_if("infer-raise")
+            x, valid = pad_group([r.x for r in group], bucket)
             probs, pred = slot.infer_fn(slot.pack, jnp.asarray(x),
                                         jnp.asarray(valid))
             probs = np.asarray(probs)
             pred = np.asarray(pred)
-        except Exception as e:  # complete exceptionally, keep serving
-            for r in group:
-                r.error = e
-                r.done.set()
-            return
+        finally:
+            # even a failing batch is a timed step: injected or genuine
+            # stragglers surface as events attributed to this model
+            self.step_timer.stop(self._batch_seq, tag=slot.name)
         t_done = time.perf_counter()
         slot.metrics.record_batch(n_valid=len(group), bucket=bucket)
         for i, r in enumerate(group):
@@ -521,10 +785,7 @@ class BCPNNService:
             slot.metrics.record_complete(t_done - r.enqueue_t)
             r.done.set()
             self._done_ids.append(r.id)
-        while len(self._done_ids) > self.result_retention:
-            stale = self._done_ids.popleft()  # usually already collected
-            with self._requests_lock:
-                self._requests.pop(stale, None)
+        self._evict_done()
 
     def _fold_feedback(self, force: bool = False) -> None:
         """At most ONE learn fold per call, rotating fairly across models:
@@ -532,7 +793,15 @@ class BCPNNService:
         ``learn_stack``) on up to ``feedback_batch`` buffered labeled
         samples of the first slot, from the feedback cursor, that is
         ready (full batch buffered, or anything buffered under
-        ``force``)."""
+        ``force``).
+
+        The fold is the engine's only state-mutating path, so its
+        containment lives here: a raising fold drops that batch's
+        samples and keeps serving (counted), and every fold's output
+        passes the non-finite sentinel BEFORE it is committed — a
+        diverged fold rolls the slot back to the last-good snapshot
+        (bit-identical: the candidate state is simply never installed)
+        and quarantines the slot to inference-only mode."""
         n = len(self._order)
         for i in range(n):
             j = (self._fb_cursor + i) % n
@@ -540,19 +809,52 @@ class BCPNNService:
             with self._admit_lock:
                 if not slot.feedback:
                     continue
+                if slot.quarantined:
+                    # inference-only: feedback admitted before the
+                    # quarantine flipped is dropped (counted), so a
+                    # stop() drain can never wedge on a dead buffer
+                    dropped = len(slot.feedback)
+                    slot.feedback.clear()
+                    slot.metrics.record_feedback_dropped(dropped)
+                    continue
                 if len(slot.feedback) < self.feedback_batch and not force:
                     continue
                 items = [slot.feedback.popleft()
                          for _ in range(min(len(slot.feedback),
                                             self.feedback_batch))]
-            x, y = cycle_batch(items, self.feedback_batch)
-            slot.state = slot.learn_fn(slot.state, jnp.asarray(x),
-                                       jnp.asarray(y))
+            self._fb_cursor = (j + 1) % n
+            inj = self.fault_injector
+            try:
+                if inj is not None:
+                    inj.raise_if("fold-raise")
+                x, y = cycle_batch(items, self.feedback_batch)
+                cand = slot.learn_fn(slot.state, jnp.asarray(x),
+                                     jnp.asarray(y))
+                if inj is not None and inj.maybe("nan-state") is not None:
+                    cand = FaultInjector.corrupt_state(cand)
+            except Exception:
+                # survived: this batch's labels are lost, serving and
+                # later folds continue on the unchanged state
+                slot.metrics.record_crash()
+                slot.metrics.record_feedback_dropped(len(items))
+                return
+            if not _state_finite(cand):
+                # Quarantine: the candidate is never installed, so the
+                # slot keeps serving from ``last_good`` unchanged — the
+                # explicit restore makes the rollback contract literal
+                # (and bitwise-checkable, analysis contract
+                # ``quarantine-rollback``).
+                slot.metrics.record_quarantine()
+                slot.metrics.record_feedback_dropped(len(items))
+                slot.state = slot.last_good
+                slot.quarantined = True
+                return
+            slot.state = cand
+            slot.last_good = cand
             # THE fold boundary: the fold (and any struct_every rewire
             # inside it) just mutated the fp32 state, so the packed
             # serving weights are re-derived here — stale int8 scales or
             # bf16 casts never outlive a fold.
             slot.repack()
             slot.metrics.record_learn(len(items))
-            self._fb_cursor = (j + 1) % n
             return

@@ -12,26 +12,44 @@ merges several models' independent Poisson processes into one arrival
 stream (superposition: combined rate = Σ rates, each arrival belongs to
 model m with probability rate_m/Σ), the skewed multi-tenant load the
 engine's per-model fairness is measured under.
+
+Both generators are robustness-aware (DESIGN.md §10): an ``Overloaded``
+rejection at submit is counted and the tick continues (an open-loop
+client does not retry into a collapsing queue), a ``Quarantined`` slot
+silently drops the feedback tick, and collection tolerates typed
+per-request failures (``DeadlineExceeded``, bisected poison errors,
+timeouts) — every error lands in ``LoadReport.errors`` so a chaos soak
+can assert that EVERY submitted id resolved one way or the other.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from .engine import BCPNNService, ServeResult
+from .errors import FaultInjected, Overloaded, Quarantined, ServeError
 
 
 @dataclasses.dataclass
 class LoadReport:
-    """Outcome of one open-loop run (one model's stream)."""
+    """Outcome of one open-loop run (one model's stream).
 
-    results: List[ServeResult]   # in submission order
-    labels: np.ndarray           # (n,) ground truth per request
+    ``results``/``labels`` hold only the SUCCESSFUL requests (aligned,
+    submission order), so ``accuracy`` is over served predictions;
+    failed-but-resolved requests are in ``errors`` and never-admitted
+    ones are counted by ``n_rejected``.  Accounting closes:
+    submitted = len(results) + len(errors), offered = submitted +
+    n_rejected."""
+
+    results: List[ServeResult]   # successful requests, submission order
+    labels: np.ndarray           # (n,) ground truth per successful request
     wall_s: float
     offered_rate_hz: float
+    errors: List[BaseException] = dataclasses.field(default_factory=list)
+    n_rejected: int = 0          # Overloaded at submit (never admitted)
 
     @property
     def achieved_rate_hz(self) -> float:
@@ -40,6 +58,13 @@ class LoadReport:
     @property
     def max_latency_ms(self) -> float:
         return max((r.latency_ms for r in self.results), default=0.0)
+
+    def error_counts(self) -> Dict[str, int]:
+        """{error type name: count} over the resolved-with-error ids."""
+        out: Dict[str, int] = {}
+        for e in self.errors:
+            out[type(e).__name__] = out.get(type(e).__name__, 0) + 1
+        return out
 
     def accuracy(self, lo: float = 0.0, hi: float = 1.0) -> float:
         """Accuracy of the served predictions over the [lo, hi) fraction
@@ -63,6 +88,46 @@ class StreamSpec:
     fb_y: Optional[np.ndarray] = None
 
 
+def _submit_tick(service: BCPNNService, x, model: Optional[str],
+                 deadline_s: Optional[float]) -> Optional[int]:
+    """One open-loop admission: the id, or None on Overloaded (the
+    open-loop client counts the rejection and moves on — retrying into
+    an already-full queue would just convert rejection into latency)."""
+    try:
+        return service.submit(x, model=model, deadline_s=deadline_s)
+    except Overloaded:
+        return None
+
+
+def _feedback_tick(service: BCPNNService, x, y: int,
+                   model: Optional[str]) -> None:
+    try:
+        service.feedback(x, y, model=model)
+    except Quarantined:
+        pass  # slot degraded to inference-only; the label tick is lost
+
+
+def _collect(service: BCPNNService,
+             submitted: List[Tuple[int, int]], timeout_s: float,
+             ) -> Tuple[List[ServeResult], List[int], List[BaseException]]:
+    """Resolve every submitted id: successes keep (result, label)
+    aligned; typed failures (shed deadlines, bisected poison, worker
+    death, collect timeout) are gathered — never raised — so one bad
+    request cannot abort collection of the rest.  Anything OUTSIDE the
+    typed ladder still propagates: a genuine bug must not be absorbed
+    into a load report."""
+    results: List[ServeResult] = []
+    labels: List[int] = []
+    errors: List[BaseException] = []
+    for rid, label in submitted:
+        try:
+            results.append(service.result(rid, timeout=timeout_s))
+            labels.append(label)
+        except (ServeError, FaultInjected, TimeoutError) as e:
+            errors.append(e)
+    return results, labels, errors
+
+
 def run_open_loop(
     service: BCPNNService,
     x_pool: np.ndarray,
@@ -75,6 +140,7 @@ def run_open_loop(
     fb_y: Optional[np.ndarray] = None,
     timeout_s: float = 120.0,
     model: Optional[str] = None,
+    deadline_s: Optional[float] = None,
 ) -> LoadReport:
     """Submit ``n_requests`` samples (drawn with replacement from the
     pool) at Poisson-``rate_hz``, then collect every result.
@@ -83,14 +149,17 @@ def run_open_loop(
     probability, one labeled sample from the feedback pool (defaults to
     the request pool) — the label stream the online-learning mode folds
     into the network while inference traffic keeps flowing.  ``model``
-    routes the whole stream to one model of a multi-model service.
+    routes the whole stream to one model of a multi-model service;
+    ``deadline_s`` stamps a per-request queueing deadline on every
+    submit (expired requests are shed and land in ``errors``).
     """
     rng = np.random.default_rng(seed)
     picks = rng.integers(0, len(x_pool), size=n_requests)
     waits = rng.exponential(1.0 / max(rate_hz, 1e-9), size=n_requests)
     fb_x = x_pool if fb_x is None else fb_x
     fb_y = y_pool if fb_y is None else fb_y
-    ids: List[int] = []
+    submitted: List[Tuple[int, int]] = []
+    n_rejected = 0
     t0 = time.perf_counter()
     next_t = t0
     for k, i in enumerate(picks):
@@ -98,14 +167,20 @@ def run_open_loop(
         delay = next_t - time.perf_counter()
         if delay > 0:
             time.sleep(delay)
-        ids.append(service.submit(x_pool[i], model=model))
+        rid = _submit_tick(service, x_pool[i], model, deadline_s)
+        if rid is None:
+            n_rejected += 1
+        else:
+            submitted.append((rid, int(y_pool[i])))
         if feedback_frac > 0 and rng.random() < feedback_frac:
             j = rng.integers(0, len(fb_x))
-            service.feedback(fb_x[j], int(fb_y[j]), model=model)
-    results = [service.result(rid, timeout=timeout_s) for rid in ids]
+            _feedback_tick(service, fb_x[j], int(fb_y[j]), model)
+    results, labels, errors = _collect(service, submitted, timeout_s)
     wall = time.perf_counter() - t0
-    return LoadReport(results=results, labels=y_pool[picks].astype(np.int64),
-                      wall_s=wall, offered_rate_hz=rate_hz)
+    return LoadReport(results=results,
+                      labels=np.asarray(labels, np.int64),
+                      wall_s=wall, offered_rate_hz=rate_hz,
+                      errors=errors, n_rejected=n_rejected)
 
 
 def run_multi_open_loop(
@@ -114,6 +189,7 @@ def run_multi_open_loop(
     n_requests: int,
     seed: int = 0,
     timeout_s: float = 120.0,
+    deadline_s: Optional[float] = None,
 ) -> Dict[str, LoadReport]:
     """One merged open-loop arrival process over several models.
 
@@ -135,8 +211,8 @@ def run_multi_open_loop(
     rng = np.random.default_rng(seed)
     owners = rng.choice(len(names), size=n_requests, p=rates / total)
     waits = rng.exponential(1.0 / total, size=n_requests)
-    ids: Dict[str, List[int]] = {n: [] for n in names}
-    labels: Dict[str, List[int]] = {n: [] for n in names}
+    submitted: Dict[str, List[Tuple[int, int]]] = {n: [] for n in names}
+    rejected: Dict[str, int] = {n: 0 for n in names}
     t0 = time.perf_counter()
     next_t = t0
     for k in range(n_requests):
@@ -147,18 +223,23 @@ def run_multi_open_loop(
         if delay > 0:
             time.sleep(delay)
         i = rng.integers(0, len(s.x_pool))
-        ids[name].append(service.submit(s.x_pool[i], model=name))
-        labels[name].append(int(s.y_pool[i]))
+        rid = _submit_tick(service, s.x_pool[i], name, deadline_s)
+        if rid is None:
+            rejected[name] += 1
+        else:
+            submitted[name].append((rid, int(s.y_pool[i])))
         if s.feedback_frac > 0 and rng.random() < s.feedback_frac:
             fb_x = s.x_pool if s.fb_x is None else s.fb_x
             fb_y = s.y_pool if s.fb_y is None else s.fb_y
             j = rng.integers(0, len(fb_x))
-            service.feedback(fb_x[j], int(fb_y[j]), model=name)
-    results = {name: [service.result(rid, timeout=timeout_s)
-                      for rid in ids[name]] for name in names}
+            _feedback_tick(service, fb_x[j], int(fb_y[j]), name)
+    collected = {name: _collect(service, submitted[name], timeout_s)
+                 for name in names}
     wall = time.perf_counter() - t0  # one clock for every stream's report
     return {name: LoadReport(
-        results=results[name],
-        labels=np.asarray(labels[name], np.int64),
+        results=collected[name][0],
+        labels=np.asarray(collected[name][1], np.int64),
         wall_s=wall,
-        offered_rate_hz=float(streams[name].rate_hz)) for name in names}
+        offered_rate_hz=float(streams[name].rate_hz),
+        errors=collected[name][2],
+        n_rejected=rejected[name]) for name in names}

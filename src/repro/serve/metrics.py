@@ -50,6 +50,16 @@ class ServeMetrics:
         self.padded_slots = 0     # pad slots across all batches
         self.learn_steps = 0
         self.learn_samples = 0
+        # Robustness ladder (DESIGN.md §10).  Request accounting closes:
+        # submitted == completed + shed + failed + still-pending.
+        self.rejected = 0         # Overloaded at admission (never admitted)
+        self.shed = 0             # deadline-expired, shed at dequeue
+        self.failed = 0           # completed exceptionally (infer failure)
+        self.crashes = 0          # supervised worker exceptions survived
+        self.bisects = 0          # group splits while isolating a poison
+        self.quarantine_events = 0  # non-finite folds rolled back
+        self.feedback_dropped = 0   # labeled samples lost to fold
+        #                             failure or quarantine
         self._t_start: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -81,6 +91,34 @@ class ServeMetrics:
         with self._lock:
             self.learn_steps += 1
             self.learn_samples += n_samples
+
+    def record_rejected(self, n: int = 1) -> None:
+        with self._lock:
+            self.rejected += n
+
+    def record_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.shed += n
+
+    def record_failed(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += n
+
+    def record_crash(self) -> None:
+        with self._lock:
+            self.crashes += 1
+
+    def record_bisect(self) -> None:
+        with self._lock:
+            self.bisects += 1
+
+    def record_quarantine(self) -> None:
+        with self._lock:
+            self.quarantine_events += 1
+
+    def record_feedback_dropped(self, n: int) -> None:
+        with self._lock:
+            self.feedback_dropped += n
 
     # ------------------------------------------------- adaptive windows --
     def arrival_rate_hz(self) -> float:
@@ -123,6 +161,13 @@ class ServeMetrics:
                                     if slots else 0.0),
                 "learn_steps": float(self.learn_steps),
                 "learn_samples": float(self.learn_samples),
+                "rejected": float(self.rejected),
+                "shed": float(self.shed),
+                "failed": float(self.failed),
+                "crashes": float(self.crashes),
+                "bisects": float(self.bisects),
+                "quarantine_events": float(self.quarantine_events),
+                "feedback_dropped": float(self.feedback_dropped),
                 "images_per_s": (self.completed / elapsed
                                  if elapsed > 0 else 0.0),
             }
@@ -140,7 +185,10 @@ class ServeMetrics:
         ms = list(metrics)
         lats, t0s, t1s = [], [], []
         out = {"submitted": 0.0, "completed": 0.0, "batches": 0.0,
-               "learn_steps": 0.0, "learn_samples": 0.0}
+               "learn_steps": 0.0, "learn_samples": 0.0,
+               "rejected": 0.0, "shed": 0.0, "failed": 0.0, "crashes": 0.0,
+               "bisects": 0.0, "quarantine_events": 0.0,
+               "feedback_dropped": 0.0}
         occupied = padded = 0
         for m in ms:
             with m._lock:
@@ -150,6 +198,13 @@ class ServeMetrics:
                 out["batches"] += m.batches
                 out["learn_steps"] += m.learn_steps
                 out["learn_samples"] += m.learn_samples
+                out["rejected"] += m.rejected
+                out["shed"] += m.shed
+                out["failed"] += m.failed
+                out["crashes"] += m.crashes
+                out["bisects"] += m.bisects
+                out["quarantine_events"] += m.quarantine_events
+                out["feedback_dropped"] += m.feedback_dropped
                 occupied += m.occupied_slots
                 padded += m.padded_slots
                 if m._t_start is not None:

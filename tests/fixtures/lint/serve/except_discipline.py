@@ -1,0 +1,15 @@
+"""Known-bad serving snippet for the serve-except rule: a worker loop
+that swallows Exception without re-raising, completing the affected
+request futures, or recording the crash — callers blocked in result()
+hang forever on the requests this batch owned."""
+
+
+def drain(batcher, infer):
+    while True:
+        group = batcher.next_group()
+        if not group:
+            return
+        try:
+            infer(group)
+        except Exception:  # BUG
+            continue

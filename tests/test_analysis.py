@@ -38,6 +38,7 @@ CORPUS = {
     "jit_purity.py": "jit-purity",
     "core/learning_dtype.py": "learning-dtype",
     "infer_pack_mutation.py": "infer-pack-mutation",
+    "serve/except_discipline.py": "serve-except",
 }
 
 
@@ -218,6 +219,49 @@ class M:
     assert findings == []
 
 
+def test_serve_except_rule_accepts_supervision_idioms(tmp_path):
+    # path-scoped: applies only under serve/; every discharge form —
+    # re-raise, future completion, supervision sink — must pass
+    serve = tmp_path / "serve"
+    serve.mkdir()
+    (serve / "snippet.py").write_text("""\
+class Engine:
+    def a(self, group, infer):
+        try:
+            infer(group)
+        except Exception as e:
+            for r in group:
+                r.error = e
+                r.done.set()
+    def b(self, e_fn):
+        try:
+            e_fn()
+        except Exception as e:
+            self._note_crash(e)
+    def c(self, e_fn):
+        try:
+            e_fn()
+        except Exception:
+            raise RuntimeError("wrapped")
+    def d(self, e_fn):
+        try:
+            e_fn()
+        except ValueError:
+            pass   # typed catch: out of scope for the rule
+""")
+    findings = lint_paths([serve / "snippet.py"], tmp_path)
+    assert findings == []
+    # the same swallow OUTSIDE serve/ is also out of scope
+    (tmp_path / "other.py").write_text("""\
+def f(g):
+    try:
+        g()
+    except Exception:
+        pass
+""")
+    assert lint_paths([tmp_path / "other.py"], tmp_path) == []
+
+
 def test_jit_purity_flags_kernel_bodies(tmp_path):
     findings = _lint_source(tmp_path, """\
 import numpy as np
@@ -266,6 +310,11 @@ def test_dp_seams_contract_holds():
 def test_recompile_sentinel_contract_holds():
     from repro.analysis.contracts import check_recompile_sentinel
     assert check_recompile_sentinel() == []
+
+
+def test_quarantine_rollback_contract_holds():
+    from repro.analysis.contracts import check_quarantine_rollback
+    assert check_quarantine_rollback() == []
 
 
 def test_barrier_scanner_sees_through_jit_and_scan():
