@@ -22,6 +22,12 @@ Two sections:
   capacity under each ``infer_dtype`` (fp32 / bf16 / int8, DESIGN.md
   §8): same checkpoint, same engine, only the packed inference weights
   change — images/s, p99 and served accuracy per dtype.
+* **Router chaos scenario** — >= 3 engines behind one ``BCPNNRouter``,
+  two replicated models under a superposed Poisson mix offered at ~10x
+  single-engine capacity, one replica-hosting engine KILLED mid-run
+  (DESIGN.md §11): router throughput, served p99 across reroute hops,
+  per-model fairness ratio under the weighted quanta, and the
+  engine-loss recovery time (loss detection -> replacement serving).
 
 Output: ``name,value,unit`` CSV rows, one machine-readable
 ``bench_serve_json={...}`` line, and a JSON dump (default
@@ -31,15 +37,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 
 import jax
+import numpy as np
 
 from repro.configs.bcpnn_models import deep_synth_spec
 from repro.core import Trainer
 from repro.data.synthetic import encode_images, make_synthetic
 from repro.serve import (
-    BCPNNService, ServeMetrics, StreamSpec, run_multi_open_loop,
-    run_open_loop,
+    BCPNNRouter, BCPNNService, ServeMetrics, StreamSpec,
+    run_multi_open_loop, run_open_loop,
 )
 
 
@@ -265,6 +273,131 @@ def bench_overload(side: int = 8, n_classes: int = 4,
     return row
 
 
+def bench_router(n_engines: int = 3, replicas: int = 2, skew: float = 3.0,
+                 side: int = 8, n_classes: int = 4, requests: int = 4000,
+                 max_batch: int = 16, epochs: int = 2, seed: int = 0,
+                 backend: str = "pallas", max_queue: int = 64,
+                 deadline_ms: float = 500.0,
+                 kill_after_frac: float = 0.3, csv: bool = True):
+    """Router chaos scenario (DESIGN.md §11): ``n_engines`` >= 3 behind
+    one ``BCPNNRouter``, two models each placed ``replicas``-wide with
+    ``skew``:1 weights, a superposed Poisson mix offered at ~10x the
+    single-engine capacity, and one replica-hosting engine killed
+    ``kill_after_frac`` into the run.  The row records what the failure
+    ladder buys: router throughput and served p99 while requests reroute
+    around the loss, the per-model fairness ratio under the weighted
+    quanta, and the recovery time from loss detection to a replacement
+    replica serving."""
+    ds = make_synthetic(512, 128, side, n_classes, seed=3, max_shift=1)
+    xt, xe = encode_images(ds.x_train), encode_images(ds.x_test)
+    spec_a = deep_synth_spec(side=side, depth=2, n_classes=n_classes,
+                             hidden_hc=8, hidden_mc=16, backend=backend)
+    spec_b = deep_synth_spec(side=side, depth=1, n_classes=n_classes,
+                             hidden_hc=4, hidden_mc=8, backend=backend)
+    tr_a, tr_b = Trainer(spec_a, seed=seed), Trainer(spec_b, seed=seed + 1)
+    tr_a.fit(xt, ds.y_train, epochs=epochs, batch=64)
+    tr_b.fit(xt, ds.y_train, epochs=epochs, batch=64)
+
+    # single-engine capacity probe for the heavier model: the router run
+    # is offered ~10x this, so every replica runs saturated and reroutes
+    # land on genuinely busy peers
+    svc = BCPNNService(tr_a.state, spec_a, max_batch=max_batch)
+    svc.warmup()
+    svc.start(warmup=False)
+    rep0 = run_open_loop(svc, xe, ds.y_test, n_requests=128,
+                         rate_hz=1e5, seed=seed)
+    svc.stop()
+    capacity_hz = rep0.achieved_rate_hz
+    offered_hz = 10.0 * capacity_hz
+
+    router = BCPNNRouter.local(n_engines, max_batch=max_batch,
+                               max_queue=max_queue)
+    router.add_model("major", tr_a.state, spec_a, replicas=replicas,
+                     weight=skew)
+    router.add_model("minor", tr_b.state, spec_b, replicas=replicas,
+                     weight=1.0)
+    router.start()
+    victim = router.placement("major")["replicas"][0]
+
+    # progress-triggered chaos: the kill lands when kill_after_frac of
+    # the offered stream has arrived (submitted + rejected tracks the
+    # arrival loop directly), NOT on a wall-clock guess — the run is
+    # milliseconds long and a timer would routinely miss it entirely
+    run_over = threading.Event()
+
+    def _chaos():
+        import time
+        target = kill_after_frac * requests
+        t_end = time.perf_counter() + 60.0
+        while time.perf_counter() < t_end and not run_over.is_set():
+            snap = router.metrics.snapshot()
+            if snap["submitted"] + snap["rejected"] >= target:
+                break
+            time.sleep(0.001)
+        if run_over.is_set():
+            return  # run finished first — do not fake a post-run loss
+        try:
+            router._engines[victim].kill("bench chaos: engine loss")
+        except Exception:
+            pass  # engine already down — row still valid
+
+    killer = threading.Thread(target=_chaos, daemon=True)
+    killer.start()
+    try:
+        r_major = offered_hz * skew / (skew + 1.0)
+        r_minor = offered_hz / (skew + 1.0)
+        reports = run_multi_open_loop(
+            router,
+            {"major": StreamSpec(xe, ds.y_test, rate_hz=r_major),
+             "minor": StreamSpec(xe, ds.y_test, rate_hz=r_minor)},
+            n_requests=requests, deadline_s=deadline_ms / 1e3, seed=seed)
+    finally:
+        run_over.set()
+        killer.join()
+        router.check_engines()
+        router.heal()
+        snap = router.metrics.snapshot()
+        router.stop()
+
+    wall_s = max(rep.wall_s for rep in reports.values())
+    lat_ms = [r.latency_ms for rep in reports.values()
+              for r in rep.results]
+    served = sum(len(rep.results) for rep in reports.values())
+    row = {
+        "n_engines": n_engines,
+        "replicas": replicas,
+        "capacity_hz": capacity_hz,
+        "offered_hz": offered_hz,
+        "deadline_ms": deadline_ms,
+        "served": served,
+        "throughput_hz": served / max(wall_s, 1e-9),
+        "served_p99_ms": (float(np.percentile(lat_ms, 99))
+                          if lat_ms else 0.0),
+        "reroutes": snap["reroutes"],
+        "engine_losses": snap["engine_losses"],
+        "replacements": snap["replacements"],
+        "recovery_s": snap.get("recovery_s_max", 0.0),
+    }
+    for name in ("major", "minor"):
+        rep = reports[name]
+        offered = len(rep.results) + len(rep.errors) + rep.n_rejected
+        total_offered = sum(len(r.results) + len(r.errors) + r.n_rejected
+                            for r in reports.values())
+        arrival_share = offered / max(total_offered, 1)
+        completion_share = len(rep.results) / max(served, 1)
+        row[f"fairness_ratio_{name}"] = (completion_share / arrival_share
+                                         if arrival_share else 0.0)
+    if csv:
+        tag = "serve_router_chaos"
+        print(f"{tag},{row['throughput_hz']:.1f},images_per_s")
+        print(f"{tag},{row['served_p99_ms']:.2f},served_p99_ms")
+        print(f"{tag},{row['fairness_ratio_minor']:.3f},"
+              f"fairness_ratio_minor")
+        print(f"{tag},{row['recovery_s']*1e3:.1f},recovery_ms")
+        print(f"{tag},{row['engine_losses']:.0f},engine_losses")
+    return row
+
+
 def run(csv=True, json_path="BENCH_serve.json", rates=(200.0, 1e5),
         backends=("jnp", "pallas"), requests=128,
         multi_rates=(400.0, 1e5), dtypes=("fp32", "bf16", "int8")):
@@ -276,9 +409,11 @@ def run(csv=True, json_path="BENCH_serve.json", rates=(200.0, 1e5),
     dtype_rows = bench_infer_dtype(dtypes=dtypes, requests=requests,
                                    csv=csv)
     overload_row = bench_overload(requests=max(requests, 256), csv=csv)
+    router_row = bench_router(csv=csv)
     summary = {"rows": rows, "multi_model": multi_rows,
                "infer_dtype": dtype_rows,
                "overload": overload_row,
+               "router": router_row,
                "device": jax.default_backend()}
     if csv:
         print("bench_serve_json=" + json.dumps(summary))

@@ -18,6 +18,14 @@ these checks run tiny real programs and inspect what jax actually built:
   call, never returned dead (core/compact.py's ``_deleted`` guard).
 * ``pallas-plans`` — the kernel pad-plan/shape/accumulator audit
   (plans.py).
+* ``router-exactly-once`` — kills an engine under a live
+  ``BCPNNRouter`` and asserts every router-issued id resolves EXACTLY
+  once (result or typed error — never lost, never twice), accounting
+  closes, and the reroute budget bounds admission attempts
+  (DESIGN.md §11).
+* ``replica-merge`` — the disjoint-support merge of agreeing replica
+  states is bit-identical to each replica on a REAL folded model state,
+  and a diverged replica set cannot merge clean (serve/reconcile.py).
 
 Every check returns a list of problem strings; empty means the contract
 holds.  ``run_contracts`` drives any subset by name.
@@ -338,6 +346,132 @@ def check_quarantine_rollback() -> List[str]:
     return problems
 
 
+# ------------------------------------------- router exactly-once ----
+
+def check_router_exactly_once() -> List[str]:
+    """Live check of the router failure ladder (DESIGN.md §11): with an
+    engine killed under load, every router-issued id resolves EXACTLY
+    once — a result or one typed error, never a hang, never a second
+    resolution — router accounting closes, and a submit against a tier
+    with no healthy replica rejects within the reroute budget."""
+    import jax
+    import numpy as np
+    from ..core.network import init_network, make_network_spec
+    from ..serve import BCPNNRouter, NoHealthyReplica, ServeError
+
+    spec = make_network_spec((2, 2), [(1, 4)], 2, backend="jnp")
+    state = init_network(spec, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    ni = spec.input_geom.N
+    problems: List[str] = []
+
+    r = BCPNNRouter.local(2, max_batch=4, max_queue=256)
+    r.add_model("m", state, spec, replicas=2)
+    r.start()
+    try:
+        ids = [r.submit(rng.random(ni).astype(np.float32), model="m")
+               for _ in range(16)]
+        victim = r.placement("m")["replicas"][0]
+        r._engines[victim].kill("contract-probe")
+        resolved = 0
+        for rid in ids:
+            try:
+                r.result(rid, timeout=30.0)
+                resolved += 1
+            except ServeError:
+                resolved += 1  # typed failure IS a resolution
+            except TimeoutError:
+                problems.append(f"router id {rid} hung past its engine's "
+                                f"death — an in-flight future was lost")
+        if resolved != len(ids) and not problems:
+            problems.append(f"{len(ids) - resolved} of {len(ids)} router "
+                            f"ids vanished without a typed resolution")
+        try:
+            r.result(ids[0], timeout=1.0)
+            problems.append("an already-resolved router id resolved a "
+                            "SECOND time — exactly-once is broken")
+        except KeyError:
+            pass
+        snap = r.metrics.snapshot()
+        if snap["submitted"] != snap["completed"] + snap["failed"]:
+            problems.append(
+                f"router accounting does not close: submitted="
+                f"{snap['submitted']} != completed={snap['completed']} "
+                f"+ failed={snap['failed']}")
+    finally:
+        r.stop()
+
+    # reroute budget: a tier with no healthy replica rejects typed,
+    # within 1 + max_reroutes admission attempts
+    r2 = BCPNNRouter.local(1, max_reroutes=2)
+    r2.add_model("m", state, spec)
+    r2.start()
+    try:
+        r2._engines["engine0"].kill("contract-probe")
+        import time as _time
+        deadline = _time.perf_counter() + 30.0
+        while r2._engines["engine0"].alive():
+            if _time.perf_counter() > deadline:
+                problems.append("killed engine never died")
+                return problems
+            _time.sleep(0.002)
+        try:
+            r2.submit(rng.random(ni).astype(np.float32), model="m")
+            problems.append("submit admitted a request on a tier with no "
+                            "healthy replica")
+        except NoHealthyReplica as e:
+            if e.attempts > 1 + r2.max_reroutes:
+                problems.append(f"reroute budget exceeded: {e.attempts} "
+                                f"attempts > 1 + {r2.max_reroutes}")
+        if r2.metrics.snapshot()["rejected"] != 1.0:
+            problems.append("NoHealthyReplica rejection not counted")
+    finally:
+        r2.stop()
+    return problems
+
+
+# ------------------------------------------------- replica merge ----
+
+def check_replica_merge() -> List[str]:
+    """The reconciliation merge's bitwise contract on a REAL folded
+    model state: merging K agreeing replicas is bit-identical to each
+    replica (the disjoint-support reassembly is lossless for every leaf
+    shape/dtype in the state tree), and a diverged replica set cannot
+    merge clean."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from ..core.network import (
+        init_network, make_network_spec, supervised_readout_step,
+    )
+    from ..serve.reconcile import (
+        merge_replica_states, state_divergence, states_bitwise_equal,
+    )
+
+    spec = make_network_spec((2, 2), [(1, 4)], 2, backend="jnp")
+    state0 = init_network(spec, jax.random.PRNGKey(1))
+    fold = jax.jit(lambda st, x, y: supervised_readout_step(st, spec, x, y))
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((4, spec.input_geom.N)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 2, size=4).astype(np.int32))
+    folded = fold(state0, x, y)
+
+    problems: List[str] = []
+    for k in (1, 2, 3):
+        merged = merge_replica_states([folded] * k)
+        if not states_bitwise_equal(merged, folded):
+            div = "; ".join(state_divergence(merged, folded)[:3])
+            problems.append(f"merge of {k} agreeing replicas is not "
+                            f"bit-identical: {div}")
+    mixed = merge_replica_states([folded, state0])
+    if states_bitwise_equal(mixed, folded) and \
+            states_bitwise_equal(mixed, state0):
+        problems.append("merge failed to expose a diverged replica set — "
+                        "reconcile() could report drifted replicas as "
+                        "consistent")
+    return problems
+
+
 # -------------------------------------------------------------- driver ----
 
 CONTRACTS: Dict[str, Callable[[], List[str]]] = {
@@ -346,6 +480,8 @@ CONTRACTS: Dict[str, Callable[[], List[str]]] = {
     "dp-seams": check_dp_seams,
     "pallas-plans": check_pallas_plans,
     "quarantine-rollback": check_quarantine_rollback,
+    "router-exactly-once": check_router_exactly_once,
+    "replica-merge": check_replica_merge,
 }
 
 

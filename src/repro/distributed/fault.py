@@ -33,8 +33,19 @@ class StepTimer:
     def stop(self, step: int, tag: Optional[str] = None) -> float:
         """Close the started window; ``tag`` attributes the step to an
         owner (the serving engine passes the model name, so an injected
-        or genuine straggler batch names WHOSE microbatch stalled)."""
+        or genuine straggler batch names WHOSE microbatch stalled).
+
+        A ``stop()`` with no open window (no prior ``start()``, or a
+        double stop) is a caller bug — raise a clear error instead of
+        the bare ``TypeError`` that ``None`` arithmetic used to produce.
+        """
+        if self._t0 is None:
+            raise RuntimeError(
+                f"StepTimer.stop(step={step}, tag={tag!r}) called without "
+                f"a prior start() — every timed window must be opened "
+                f"with start() before it is closed")
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         hist = self._times[-self.window:]
         if len(hist) >= 8:
             med = float(np.median(hist))

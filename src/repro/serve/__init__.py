@@ -2,23 +2,35 @@
 in-deployment online learning for trained deep BCPNN networks
 (DESIGN.md §6), with a typed robustness ladder — admission control,
 deadlines/load-shedding, worker supervision, learning-state quarantine —
-and a deterministic fault-injection harness (DESIGN.md §10)."""
+a deterministic fault-injection harness (DESIGN.md §10), and a
+fault-tolerant multi-engine router — replica failover, bounded
+reroute-on-overload, engine-loss recovery, replica reconciliation
+(DESIGN.md §11)."""
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .engine import BCPNNService, ServeResult, cycle_batch
 from .errors import (
-    DeadlineExceeded, FaultInjected, Overloaded, Quarantined, ServeError,
-    WorkerDied,
+    DeadlineExceeded, EngineKilled, FaultInjected, NoHealthyReplica,
+    Overloaded, Quarantined, ServeError, WorkerDied,
 )
 from .faultinject import POINTS, Fault, FaultInjector
+from .handle import EngineHandle, LocalEngineHandle
 from .loadgen import LoadReport, StreamSpec, run_multi_open_loop, run_open_loop
-from .metrics import ServeMetrics
+from .metrics import RouterMetrics, ServeMetrics
+from .reconcile import (
+    chunk_bounds, merge_replica_states, state_divergence, state_finite,
+    states_bitwise_equal,
+)
+from .router import BCPNNRouter
 
 __all__ = [
     "MicroBatcher", "Request", "default_buckets", "pad_group", "pick_bucket",
     "BCPNNService", "ServeResult", "cycle_batch",
     "ServeError", "Overloaded", "DeadlineExceeded", "WorkerDied",
-    "Quarantined", "FaultInjected",
+    "Quarantined", "FaultInjected", "NoHealthyReplica", "EngineKilled",
     "POINTS", "Fault", "FaultInjector",
+    "EngineHandle", "LocalEngineHandle", "BCPNNRouter",
+    "chunk_bounds", "merge_replica_states", "states_bitwise_equal",
+    "state_divergence", "state_finite",
     "LoadReport", "StreamSpec", "run_multi_open_loop", "run_open_loop",
-    "ServeMetrics",
+    "ServeMetrics", "RouterMetrics",
 ]

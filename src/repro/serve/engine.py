@@ -6,14 +6,17 @@ slot": its own spec, shape buckets, metrics and compiled-once jits per
 bitstreams selected at runtime) and drains a SHARED admission front into
 shape-bucketed microbatches:
 
-  * **Per-model fairness**: each slot has its own admission queue; the
-    worker round-robins a rotating cursor over slots with pending work,
-    taking at most one microbatch per model per pass — under a 10:1
-    skewed arrival mix the minority model is never more than one
-    microbatch away from service, so no model starves behind another's
-    burst (a single shared FIFO would serve them strictly in arrival
-    order; per-model queues + round-robin is the deficit-round-robin
-    analogue for unit-cost quanta).
+  * **Per-model weighted fairness**: each slot has its own admission
+    queue; the worker picks the pending slot with the smallest virtual
+    finish time (start-time fair queueing): serving ``n`` samples of a
+    model advances its finish tag by ``n * cost / weight``, where
+    ``cost`` is the model's per-sample MAC estimate from its spec and
+    ``weight`` its provisioned share.  A Model-3-sized stack therefore
+    pays for its size in virtual time and cannot starve cheap models;
+    with equal costs and weights the tags tie every pass and the
+    cursor tie-break degenerates to exact round-robin (the PR 5
+    behavior — under a 10:1 skewed arrival mix the minority model is
+    never more than one microbatch away from service).
   * **Adaptive bucket selection**: each model's active bucket is
     re-derived from its observed arrival-rate and group-occupancy
     windows (``ServeMetrics``): the collect loop stops waiting once the
@@ -75,7 +78,7 @@ from ..core.network import (
 from ..distributed.fault import StepTimer
 from .batching import MicroBatcher, Request, default_buckets, pad_group, pick_bucket
 from .errors import (
-    DeadlineExceeded, Overloaded, Quarantined, WorkerDied,
+    DeadlineExceeded, EngineKilled, Overloaded, Quarantined, WorkerDied,
 )
 from .faultinject import FaultInjector
 from .metrics import ServeMetrics
@@ -109,6 +112,19 @@ def cycle_batch(items: Sequence[Tuple[np.ndarray, int]],
     return x, y
 
 
+def _spec_cost(spec: Any) -> float:
+    """Virtual per-sample service cost of one model: the MAC estimate of
+    its forward pass (patchy projections count only their ``nact`` active
+    input hypercolumns).  Only RATIOS between hosted models matter — the
+    weighted scheduler divides by it, so equal-geometry models degenerate
+    to unit quanta."""
+    total = 0.0
+    for p in list(spec.projs) + [spec.readout]:
+        fan_in = (p.nact * p.pre.M) if p.nact else p.pre.N
+        total += float(fan_in * p.post.N)
+    return max(total, 1.0)
+
+
 @dataclasses.dataclass
 class _ModelSlot:
     """Everything one hosted model owns inside the engine."""
@@ -122,6 +138,13 @@ class _ModelSlot:
     learn_fn: Any
     feedback: collections.deque
     target_bucket: int               # adaptive active bucket (worker only)
+    # Weighted fair scheduling (start-time fair queueing): ``cost`` is
+    # the per-sample MAC estimate from the spec, ``weight`` the
+    # provisioned share, ``vft`` the slot's virtual finish tag — serving
+    # n samples advances it by n * cost / weight (worker thread only).
+    weight: float = 1.0
+    cost: float = 1.0
+    vft: float = 0.0
     pack: Any = None                 # InferParams derived at fold boundaries
     # Learning-state quarantine (worker thread only).  ``last_good`` is
     # the newest state that passed the post-fold non-finite sentinel; a
@@ -156,6 +179,19 @@ def _validate_state(state, spec, name: str) -> None:
                           where=f"model {name!r} readout")
 
 
+@dataclasses.dataclass
+class _ControlOp:
+    """One deferred control-plane operation (state install/read): the
+    worker runs ``fn`` at the top of its loop — a fold boundary — and
+    completes ``done``; the caller blocks on it (or gets WorkerDied)."""
+
+    fn: Any
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    result: Any = None
+    error: Optional[BaseException] = None
+
+
 def _state_finite(state) -> bool:
     """Cheap post-fold sentinel: True iff every float leaf of the state
     pytree (traces, weights, biases — everything a diverged fold could
@@ -183,7 +219,7 @@ class BCPNNService:
     ``submit(x, model=...)``.
     """
 
-    def __init__(self, state, spec_or_cfg, max_batch: int = 64,
+    def __init__(self, state=None, spec_or_cfg=None, max_batch: int = 64,
                  buckets: Optional[Sequence[int]] = None,
                  max_wait_ms: float = 2.0, online_learning: bool = False,
                  feedback_batch: int = 32, metrics_window: int = 4096,
@@ -227,8 +263,9 @@ class BCPNNService:
         self._buckets = tuple(sorted(buckets or default_buckets(max_batch)))
         self._max_wait_s = max_wait_ms * 1e-3
         self._slots: Dict[str, _ModelSlot] = {}
-        self._order: List[str] = []          # round-robin service order
-        self._cursor = 0                     # next slot index to consider
+        self._order: List[str] = []          # slot registration order
+        self._cursor = 0                     # tie-break cursor (worker only)
+        self._vclock = 0.0                   # virtual clock (worker only)
         self._fb_cursor = 0                  # next slot to fold feedback
         self._requests: Dict[int, Request] = {}
         self._requests_lock = threading.Lock()
@@ -262,7 +299,21 @@ class BCPNNService:
         # faults included) to the slot that stalled.
         self.step_timer = StepTimer()
         self._batch_seq = 0
-        self.add_model(name, state, spec_or_cfg)
+        # Control plane: deferred operations (state install/read) the
+        # worker executes at the top of its loop — a fold boundary, so a
+        # router-installed reconciled state can never race a fold or an
+        # in-flight forward.  Appended under the admission lock; drained
+        # by the worker (also under the lock) or by _die.
+        self._control: collections.deque = collections.deque()
+        # Chaos kill switch: set by kill(); the worker raises
+        # EngineKilled on its next pass (terminal, like a real abort).
+        self._kill_reason: Optional[str] = None
+        if state is not None or spec_or_cfg is not None:
+            if state is None or spec_or_cfg is None:
+                raise ValueError("pass BOTH state and spec_or_cfg (or "
+                                 "neither, for an engine that starts "
+                                 "empty behind a router)")
+            self.add_model(name, state, spec_or_cfg)
 
     @classmethod
     def multi(cls, models: Mapping[str, Tuple[Any, Any]],
@@ -279,14 +330,28 @@ class BCPNNService:
         return svc
 
     # ---------------------------------------------------------- models ----
-    def add_model(self, name: str, state, spec_or_cfg) -> None:
-        """Register one checkpointed model (before ``start`` only — slot
-        registration is not synchronized against the worker's round-robin
-        scan)."""
-        if self._thread is not None:
-            raise RuntimeError("cannot add a model to a running service")
+    def add_model(self, name: str, state, spec_or_cfg,
+                  weight: float = 1.0, live: bool = False) -> None:
+        """Register one checkpointed model.
+
+        By default registration is a construction-time operation (a
+        running service raises).  ``live=True`` is the router's
+        engine-loss recovery path: the slot is built and its jits warmed
+        on the CALLING thread, then published to the worker atomically
+        under the admission lock — the worker's scheduler scan only ever
+        sees it fully formed, and no request pays the compile.
+
+        ``weight`` is the model's provisioned share for the weighted
+        fair scheduler (>0; service time is proportional to
+        weight/cost, so a 2x weight buys 2x the virtual-time share)."""
+        if self._thread is not None and not live:
+            raise RuntimeError("cannot add a model to a running service "
+                               "(pass live=True for an online placement, "
+                               "e.g. router engine-loss recovery)")
         if name in self._slots:
             raise ValueError(f"model {name!r} already registered")
+        if not (weight > 0):
+            raise ValueError(f"weight must be > 0, got {weight}")
         spec = as_spec(spec_or_cfg)
         if self.infer_dtype is not None:
             spec = spec.with_infer_dtype(self.infer_dtype)
@@ -304,7 +369,7 @@ class BCPNNService:
         else:
             learn_fn = jax.jit(lambda st, x, y, _spec=spec:
                                supervised_readout_step(st, _spec, x, y))
-        self._slots[name] = _ModelSlot(
+        slot = _ModelSlot(
             name=name, state=state, spec=spec,
             batcher=MicroBatcher(self._buckets, max_wait_s=self._max_wait_s,
                                  max_depth=self.max_queue),
@@ -312,10 +377,21 @@ class BCPNNService:
             infer_fn=infer_fn, learn_fn=learn_fn,
             feedback=collections.deque(),
             target_bucket=self._buckets[-1],
+            weight=float(weight), cost=_spec_cost(spec),
             last_good=state,
         )
-        self._slots[name].repack()
-        self._order.append(name)
+        slot.repack()
+        if live and self._thread is not None:
+            # compile off the serving path, on the caller's thread
+            self._warm_slot(slot)
+        with self._admit_lock:
+            if self._thread is not None:
+                self._check_alive()
+            # a late joiner starts at the current virtual clock so it
+            # cannot claim credit for virtual time it never waited
+            slot.vft = self._vclock
+            self._slots[name] = slot
+            self._order.append(name)
 
     def models(self) -> Tuple[str, ...]:
         return tuple(self._order)
@@ -434,43 +510,54 @@ class BCPNNService:
         """Pre-compile every (model, bucket) shape (and the learn shapes)
         so no request pays a compile on the serving path."""
         for slot in self._slots.values():
-            ni = slot.spec.input_geom.N
-            for b in self._buckets:
-                probs, _ = slot.infer_fn(slot.pack,
-                                         jnp.zeros((b, ni), jnp.float32),
-                                         jnp.zeros((b,), jnp.float32))
-                jax.block_until_ready(probs)
-            if self.online_learning:
-                st = slot.learn_fn(
-                    slot.state,
-                    jnp.zeros((self.feedback_batch, ni), jnp.float32),
-                    jnp.zeros((self.feedback_batch,), jnp.int32))
-                jax.block_until_ready(st.readout.w)  # discard: compile only
+            self._warm_slot(slot)
+
+    def _warm_slot(self, slot: _ModelSlot) -> None:
+        ni = slot.spec.input_geom.N
+        for b in self._buckets:
+            probs, _ = slot.infer_fn(slot.pack,
+                                     jnp.zeros((b, ni), jnp.float32),
+                                     jnp.zeros((b,), jnp.float32))
+            jax.block_until_ready(probs)
+        if self.online_learning:
+            st = slot.learn_fn(
+                slot.state,
+                jnp.zeros((self.feedback_batch, ni), jnp.float32),
+                jnp.zeros((self.feedback_batch,), jnp.int32))
+            jax.block_until_ready(st.readout.w)  # discard: compile only
 
     # ---------------------------------------------------------- front-end --
     def submit(self, x: np.ndarray, model: Optional[str] = None,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               deadline_t: Optional[float] = None) -> int:
         """Admit one sample ((N,) encoded rates); returns a request id.
         Multi-model services route by ``model`` name.
 
         ``deadline_s`` (or the engine's ``default_deadline_s``) bounds
         how long the request may WAIT: if it is still queued past the
         deadline it is shed at dequeue time and ``result`` raises
-        ``DeadlineExceeded``.  A full admission queue (``max_queue``)
-        raises ``Overloaded`` here instead of admitting — the request is
-        never registered, so rejection is O(1) and allocation-free for
-        the engine."""
+        ``DeadlineExceeded``.  ``deadline_t`` is the same bound as an
+        ABSOLUTE ``time.perf_counter()`` instant and wins over both —
+        it is how a router re-submitting a rerouted request carries the
+        ORIGINAL admission deadline across hops, so a retry can never
+        resurrect an expired budget.  A full admission queue
+        (``max_queue``) raises ``Overloaded`` here instead of admitting
+        — the request is never registered, so rejection is O(1) and
+        allocation-free for the engine."""
         slot = self._slot(model)
         with self._admit_lock:
             self._check_alive()
-            d = self.default_deadline_s if deadline_s is None else deadline_s
             now = time.perf_counter()
+            if deadline_t is None:
+                d = (self.default_deadline_s if deadline_s is None
+                     else deadline_s)
+                deadline_t = (now + d) if d is not None else None
             with self._requests_lock:
                 rid = self._next_id
                 self._next_id += 1
                 req = Request(id=rid, x=np.asarray(x, np.float32),
                               enqueue_t=now, model=slot.name,
-                              deadline_t=(now + d) if d is not None else None)
+                              deadline_t=deadline_t)
                 self._requests[rid] = req
             try:
                 slot.batcher.put(req)
@@ -551,9 +638,99 @@ class BCPNNService:
             self._work.set()
 
     def queue_depth(self, model: Optional[str] = None) -> int:
-        if model is None and len(self._slots) > 1:
+        if model is None and len(self._slots) != 1:
+            # engine-wide total (0 for an empty router-managed engine)
             return sum(s.batcher.depth() for s in self._slots.values())
         return self._slot(model).batcher.depth()
+
+    def feedback_depth(self, model: Optional[str] = None) -> int:
+        """Buffered (not yet folded) labeled samples for one model — the
+        router's quiescence probe: a replica with an empty buffer has
+        folded its whole feedback prefix, which is when reconciliation
+        can compare replicas bit-exactly."""
+        if model is None and len(self._slots) != 1:
+            return sum(len(s.feedback) for s in self._slots.values())
+        return len(self._slot(model).feedback)
+
+    def alive(self) -> bool:
+        """True while the engine can take traffic: started, not stopped,
+        worker not dead."""
+        return (self._thread is not None and not self._dead.is_set()
+                and not self._stop.is_set())
+
+    def quarantined(self, model: Optional[str] = None) -> bool:
+        return self._slot(model).quarantined
+
+    # ----------------------------------------------------- control plane --
+    def kill(self, reason: str = "killed") -> None:
+        """Abrupt death (chaos testing): the worker raises
+        ``EngineKilled`` on its next pass, which takes the same terminal
+        ``_die`` path as a real interpreter-level failure — every
+        pending future completes ``WorkerDied``, later admissions fail
+        fast.  No drain, no cleanup: that is the point."""
+        with self._admit_lock:
+            if self._dead.is_set() or self._thread is None:
+                return  # already dead or never started: nothing to kill
+            self._kill_reason = reason
+            self._work.set()
+
+    def _control_call(self, fn, timeout_s: float = 60.0):
+        """Run ``fn`` on the worker thread at its next fold boundary and
+        return its result (raises the op's error, ``WorkerDied`` if the
+        engine dies while waiting, or TimeoutError)."""
+        op = _ControlOp(fn=fn)
+        with self._admit_lock:
+            self._check_alive()
+            self._control.append(op)
+            self._work.set()
+        end = time.perf_counter() + timeout_s
+        while not op.done.wait(0.1):
+            if op.done.is_set():
+                break
+            if self._dead.is_set():
+                raise WorkerDied(f"control op abandoned: worker died "
+                                 f"({self._worker_error!r})")
+            if time.perf_counter() >= end:
+                raise TimeoutError(f"control op not served within "
+                                   f"{timeout_s}s")
+        if op.error is not None:
+            raise op.error
+        return op.result
+
+    def set_model_state(self, model: Optional[str], state,
+                        timeout_s: float = 60.0) -> None:
+        """Install ``state`` as one model's new learning state — the
+        router's replica-repair/reconciliation hook.  On a running
+        engine the install happens on the worker thread at a fold
+        boundary (never racing a fold or an in-flight forward) and is a
+        fold boundary itself: last-good resets, the serving pack is
+        re-derived, and a finite state clears any quarantine."""
+        slot = self._slot(model)
+
+        def install():
+            _validate_state(state, slot.spec, slot.name)
+            slot.state = state
+            slot.last_good = state
+            slot.repack()
+            if slot.quarantined and _state_finite(state):
+                slot.quarantined = False
+
+        if self._thread is None:
+            install()
+        else:
+            self._control_call(install, timeout_s=timeout_s)
+
+    def model_state_sync(self, model: Optional[str] = None,
+                         timeout_s: float = 60.0):
+        """One model's state read AT A FOLD BOUNDARY of the running
+        worker (falls back to a direct read on a stopped engine) — the
+        consistent snapshot replica reconciliation compares.  A plain
+        ``model_state`` read can observe a state mid-sequence; this one
+        cannot."""
+        slot = self._slot(model)
+        if self._thread is None:
+            return slot.state
+        return self._control_call(lambda: slot.state, timeout_s=timeout_s)
 
     def active_buckets(self, model: Optional[str] = None) -> Tuple[int, ...]:
         """The bucket subset the adaptive policy currently collects
@@ -597,6 +774,8 @@ class BCPNNService:
         # admissions fail fast instead of queueing into the void.
         try:
             self._serve_loop()
+        except EngineKilled as e:
+            self._die(e)  # intentional kill(): bookkept, no excepthook spam
         except BaseException as e:
             self._die(e)
             raise
@@ -605,6 +784,9 @@ class BCPNNService:
         while True:
             group = []
             try:
+                if self._kill_reason is not None:
+                    raise EngineKilled(self._kill_reason)
+                self._drain_control()
                 group, slot = self._next_work()
                 if group:
                     self._execute(slot, group)
@@ -629,12 +811,28 @@ class BCPNNService:
                 self._note_crash(e)
                 time.sleep(self._poll_s)  # never hot-spin a crash loop
 
+    def _drain_control(self) -> None:
+        """Serve queued control ops (state installs/reads) — the loop
+        top is a fold boundary: no forward is in flight and the previous
+        iteration's fold has committed."""
+        while True:
+            with self._admit_lock:
+                if not self._control:
+                    return
+                op = self._control.popleft()
+            try:
+                op.result = op.fn()
+            except Exception as e:
+                op.error = e
+            op.done.set()
+
     def _note_crash(self, e: Exception) -> None:
         """Count one survived worker exception.  Attribution: scheduler-
         level crashes have no owning slot, so they land in the first
         slot's registry — aggregate accounting stays closed either way."""
         self._last_crash = e
-        self._slots[self._order[0]].metrics.record_crash()
+        if self._order:
+            self._slots[self._order[0]].metrics.record_crash()
 
     def _die(self, exc: BaseException) -> None:
         """Terminal path: record the killer, flip the dead flag under the
@@ -651,34 +849,60 @@ class BCPNNService:
             for r in pending:
                 r.error = err
                 r.done.set()
+            # control-plane callers must not hang on a dead worker either
+            while self._control:
+                op = self._control.popleft()
+                op.error = err
+                op.done.set()
 
     def _next_work(self) -> Tuple[List[Request], Optional[_ModelSlot]]:
-        """Fair scheduler: scan slots round-robin from the cursor, serve
-        the first with pending requests (one microbatch), advance the
-        cursor past it.  When nothing is pending anywhere, block briefly
-        on the shared work signal (a submit landing after the scan re-sets
-        it, so no wakeup is lost — the worker always rescans after the
-        wait)."""
+        """Weighted fair scheduler (start-time fair queueing): among
+        slots with pending requests, serve one microbatch of the slot
+        with the smallest virtual start ``max(slot.vft, vclock)`` —
+        serving n samples advances the slot's finish tag by
+        ``n * cost / weight``, so an expensive model pays for its size
+        in virtual time instead of taking one unit-cost turn per pass.
+        Tag ties break by round-robin distance from the cursor, which
+        makes equal-cost equal-weight slots degenerate to EXACT
+        round-robin (the deterministic PR 5 fairness the scheduler tests
+        pin).  ``max(vft, vclock)`` re-bases an idle slot's tag to the
+        current virtual clock, so a model cannot bank credit while it
+        has no traffic and then monopolize the engine.
+
+        When nothing is pending anywhere, block briefly on the shared
+        work signal (a submit landing after the scan re-sets it, so no
+        wakeup is lost — the worker always rescans after the wait)."""
         n = len(self._order)
+        best_i = -1
+        best_key: Optional[Tuple[float, int]] = None
         for i in range(n):
             slot = self._slots[self._order[(self._cursor + i) % n]]
             if slot.batcher.depth() > 0:
-                self._adapt(slot)
-                group = slot.batcher.next_group(
-                    timeout_s=0.0,
-                    target=(slot.target_bucket if self.adaptive_buckets
-                            else None))
-                if group:
-                    self._cursor = (self._cursor + i + 1) % n
-                    live = self._shed_expired(slot, group)
-                    if not live:
-                        # whole group expired; rescan from the advanced
-                        # cursor on the next loop pass
-                        return [], None
-                    return live, slot
-        self._work.wait(self._poll_s)
-        self._work.clear()
-        return [], None
+                key = (max(slot.vft, self._vclock), i)
+                if best_key is None or key < best_key:
+                    best_key, best_i = key, i
+        if best_key is None:
+            self._work.wait(self._poll_s)
+            self._work.clear()
+            return [], None
+        slot = self._slots[self._order[(self._cursor + best_i) % n]]
+        self._adapt(slot)
+        group = slot.batcher.next_group(
+            timeout_s=0.0,
+            target=(slot.target_bucket if self.adaptive_buckets
+                    else None))
+        if not group:
+            return [], None
+        self._cursor = (self._cursor + best_i + 1) % n
+        start = max(slot.vft, self._vclock)
+        self._vclock = start
+        slot.vft = start + len(group) * slot.cost / slot.weight
+        live = self._shed_expired(slot, group)
+        if not live:
+            # whole group expired; rescan from the advanced cursor on
+            # the next loop pass
+            return [], None
+        return live, slot
 
     def _shed_expired(self, slot: _ModelSlot,
                       group: List[Request]) -> List[Request]:
@@ -738,7 +962,15 @@ class BCPNNService:
         depth log2(max_batch)): a single poison request costs O(log n)
         retry batches and resolves exceptionally ALONE — its groupmates
         still get genuine results instead of inheriting its error, and
-        a transient failure simply succeeds on retry."""
+        a transient failure simply succeeds on retry.
+
+        The deadline check repeats at EVERY bisection hop against the
+        request's absolute ``deadline_t``: retry time is queue time, so
+        a request whose budget ran out during its groupmate's isolation
+        sheds here instead of being resurrected by the retry."""
+        group = self._shed_expired(slot, group)
+        if not group:
+            return
         try:
             self._infer_group(slot, group)
         except Exception as e:
@@ -764,6 +996,13 @@ class BCPNNService:
                 f = inj.maybe("slow-batch")
                 if f is not None:
                     time.sleep(f.delay_s)  # injected straggler
+                k = inj.maybe("engine-kill")
+                if k is not None:
+                    # BaseException: skips every supervision layer and
+                    # lands in _die — the whole engine goes down with
+                    # this batch in flight (router chaos soak fodder)
+                    raise EngineKilled(
+                        f"injected engine-kill (invocation {k.index})")
                 inj.check_group([r.id for r in group])
                 inj.raise_if("infer-raise")
             x, valid = pad_group([r.x for r in group], bucket)

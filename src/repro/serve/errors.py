@@ -44,6 +44,36 @@ class Overloaded(ServeError):
         self.max_queue = max_queue
 
 
+class NoHealthyReplica(Overloaded):
+    """Router-level rejection: every candidate replica rejected the
+    request (``Overloaded``/``WorkerDied``) within the bounded reroute
+    budget, or the request's deadline expired mid-reroute.  Subclasses
+    ``Overloaded`` so open-loop clients that already treat admission
+    rejection as "count and move on" need no new branch — the request
+    was never admitted anywhere."""
+
+    def __init__(self, model: str, attempts: int,
+                 last_error: "BaseException | None" = None):
+        detail = (f"; last: {type(last_error).__name__}: {last_error}"
+                  if last_error is not None else "")
+        RuntimeError.__init__(
+            self, f"model {model!r}: no healthy replica admitted the "
+                  f"request after {attempts} attempt(s){detail}")
+        self.model = model
+        self.attempts = attempts
+        self.last_error = last_error
+        self.depth = -1        # Overloaded attr compat: not one queue's
+        self.max_queue = -1    # bound but the whole replica set's
+
+
+class EngineKilled(BaseException):
+    """Injected abrupt engine death (chaos testing only).  Deliberately
+    a ``BaseException`` so the supervised worker loop's ``except
+    Exception`` does NOT survive it — it reaches the terminal ``_die``
+    path exactly like a real interpreter-level failure would, completing
+    every pending future with ``WorkerDied``."""
+
+
 class DeadlineExceeded(ServeError):
     """Admitted request shed at dequeue: its deadline expired before
     padding/compute."""

@@ -19,6 +19,10 @@ production wiring passes ``None`` and pays a single attribute check:
   compute (a straggler).  Exercises the ``StepTimer`` wiring: the delay
   must surface as an attributed straggler event, not silent tail
   latency.
+* ``engine-kill`` — the engine worker raises ``EngineKilled`` (a
+  BaseException) before one microbatch's compute: the WHOLE engine dies
+  abruptly, every pending future completes ``WorkerDied``.  Exercises
+  the router's engine-loss recovery (reroute + re-placement).
 
 Determinism: every point owns an independent counter and an independent
 ``np.random.default_rng([seed, point_index])`` stream, so WHICH
@@ -47,7 +51,13 @@ import numpy as np
 
 from .errors import FaultInjected
 
-POINTS = ("infer-raise", "fold-raise", "nan-state", "slow-batch")
+# "engine-kill" is appended LAST so the per-point rng stream indices of
+# the original four points stay stable across seeds recorded in older
+# soak baselines.  It is consulted on the microbatch path and raises
+# EngineKilled (a BaseException): the whole engine dies abruptly — the
+# router-level chaos soak uses it to exercise engine-loss recovery.
+POINTS = ("infer-raise", "fold-raise", "nan-state", "slow-batch",
+          "engine-kill")
 
 
 @dataclasses.dataclass(frozen=True)

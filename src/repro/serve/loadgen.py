@@ -25,12 +25,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from .engine import BCPNNService, ServeResult
+from .engine import ServeResult
 from .errors import FaultInjected, Overloaded, Quarantined, ServeError
+
+# Any serving front with submit/result/feedback and the typed error
+# ladder: a BCPNNService, or a BCPNNRouter over several of them (its
+# NoHealthyReplica rejection IS an Overloaded — open-loop clients need
+# no router-specific branch).
+ServingFront = Any
 
 
 @dataclasses.dataclass
@@ -88,7 +94,7 @@ class StreamSpec:
     fb_y: Optional[np.ndarray] = None
 
 
-def _submit_tick(service: BCPNNService, x, model: Optional[str],
+def _submit_tick(service: ServingFront, x, model: Optional[str],
                  deadline_s: Optional[float]) -> Optional[int]:
     """One open-loop admission: the id, or None on Overloaded (the
     open-loop client counts the rejection and moves on — retrying into
@@ -99,7 +105,7 @@ def _submit_tick(service: BCPNNService, x, model: Optional[str],
         return None
 
 
-def _feedback_tick(service: BCPNNService, x, y: int,
+def _feedback_tick(service: ServingFront, x, y: int,
                    model: Optional[str]) -> None:
     try:
         service.feedback(x, y, model=model)
@@ -107,7 +113,7 @@ def _feedback_tick(service: BCPNNService, x, y: int,
         pass  # slot degraded to inference-only; the label tick is lost
 
 
-def _collect(service: BCPNNService,
+def _collect(service: ServingFront,
              submitted: List[Tuple[int, int]], timeout_s: float,
              ) -> Tuple[List[ServeResult], List[int], List[BaseException]]:
     """Resolve every submitted id: successes keep (result, label)
@@ -129,7 +135,7 @@ def _collect(service: BCPNNService,
 
 
 def run_open_loop(
-    service: BCPNNService,
+    service: ServingFront,
     x_pool: np.ndarray,
     y_pool: np.ndarray,
     n_requests: int,
@@ -184,7 +190,7 @@ def run_open_loop(
 
 
 def run_multi_open_loop(
-    service: BCPNNService,
+    service: ServingFront,
     streams: Mapping[str, StreamSpec],
     n_requests: int,
     seed: int = 0,

@@ -221,3 +221,110 @@ class ServeMetrics:
         out["arrival_rate_hz"] = sum(m.arrival_rate_hz() for m in ms)
         out.update(_percentile_keys(lat))
         return out
+
+
+class RouterMetrics:
+    """Thread-safe counters for the cross-engine router's own failure
+    ladder (the per-engine ``ServeMetrics`` stay authoritative for
+    engine-side accounting; these count what only the ROUTER can see:
+    reroutes, engine losses, re-placements, reconciliation outcomes).
+
+    Router accounting closes the same way the engine's does:
+    ``submitted == completed + failed + pending`` over router-issued
+    ids, and ``offered == submitted + rejected`` (rejected =
+    ``NoHealthyReplica`` — no engine ever admitted the request)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.submitted = 0          # admitted somewhere, router id issued
+        self.completed = 0          # resolved with a result
+        self.failed = 0             # resolved with a typed error
+        self.rejected = 0           # NoHealthyReplica (never admitted)
+        self.reroutes = 0           # extra submission attempts past the 1st
+        self.engine_losses = 0      # engines declared dead
+        self.replacements = 0       # models re-placed after a loss
+        self.reconciliations = 0    # replica sets verified consistent
+        self.mismatches = 0         # replica sets found diverged
+        self.repairs = 0            # replica states repaired/installed
+        self.quarantine_drains = 0  # replica-level drain+revalidate cycles
+        self.crashes = 0            # survived router-maintenance errors
+        self._loss_t: Dict[str, float] = {}       # engine -> loss time
+        self.recovery_s: Dict[str, float] = {}    # engine -> re-place lag
+
+    def record_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.submitted += n
+
+    def record_complete(self, n: int = 1) -> None:
+        with self._lock:
+            self.completed += n
+
+    def record_failed(self, n: int = 1) -> None:
+        with self._lock:
+            self.failed += n
+
+    def record_rejected(self, n: int = 1) -> None:
+        with self._lock:
+            self.rejected += n
+
+    def record_reroute(self, n: int = 1) -> None:
+        with self._lock:
+            self.reroutes += n
+
+    def record_engine_loss(self, engine: str,
+                           now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            self.engine_losses += 1
+            self._loss_t[engine] = now
+
+    def record_replacement(self, engine: str,
+                           now: Optional[float] = None) -> None:
+        """One model re-placed after ``engine``'s loss; the lag from the
+        loss to the LAST replacement is the recovery time the bench
+        reports."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            self.replacements += 1
+            t0 = self._loss_t.get(engine)
+            if t0 is not None:
+                self.recovery_s[engine] = now - t0
+
+    def record_reconciliation(self, consistent: bool) -> None:
+        with self._lock:
+            if consistent:
+                self.reconciliations += 1
+            else:
+                self.mismatches += 1
+
+    def record_repair(self, n: int = 1) -> None:
+        with self._lock:
+            self.repairs += n
+
+    def record_quarantine_drain(self) -> None:
+        with self._lock:
+            self.quarantine_drains += 1
+
+    def record_crash(self) -> None:
+        with self._lock:
+            self.crashes += 1
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            out = {
+                "submitted": float(self.submitted),
+                "completed": float(self.completed),
+                "failed": float(self.failed),
+                "rejected": float(self.rejected),
+                "reroutes": float(self.reroutes),
+                "engine_losses": float(self.engine_losses),
+                "replacements": float(self.replacements),
+                "reconciliations": float(self.reconciliations),
+                "mismatches": float(self.mismatches),
+                "repairs": float(self.repairs),
+                "quarantine_drains": float(self.quarantine_drains),
+                "crashes": float(self.crashes),
+            }
+            if self.recovery_s:
+                out["recovery_s_max"] = max(self.recovery_s.values())
+            return out

@@ -1,0 +1,136 @@
+"""Replica state reconciliation: the bit-exact disjoint-support merge,
+lifted from the data-parallel trace all-reduce to whole model states.
+
+Why replicas agree in the first place (the protocol, DESIGN.md §11):
+the router BROADCASTS every labeled feedback sample of a replicated
+online-learning model to all live replicas in one admission order, and
+replicas run ``feedback_eager=False`` — folds fire only on FULL
+feedback batches, so the fold compositions are a pure function of the
+feedback stream prefix, never of worker timing.  Two replicas that have
+folded the same prefix (both feedback buffers empty = quiescent) are
+therefore bit-identical by construction, exactly like the served-vs-
+offline-replay parity the PR 5 tests pin.
+
+Reconciliation VERIFIES that invariant (and repairs drift): each of the
+K replicas contributes one contiguous chunk of every raveled state
+leaf, each chunk is scattered into zeros at its own offset, and the K
+zero-padded partials are summed — the disjoint-support merge of
+``distributed/data_parallel.py::_co_allreduce_dense``, generalized from
+post-column shards to arbitrary contiguous chunks (no divisibility
+constraint).  Every element of the merged leaf is one real value plus
+zeros, so IF the replicas agree the merge is bit-identical to every one
+of them; if they diverged, the merged state differs from at least one
+replica and the router repairs the laggards from the authoritative
+replica (max folded samples, finite).
+
+Everything here is host-side numpy on settled states — reconciliation
+runs at fold boundaries (``EngineHandle.model_state_sync``), never on
+the per-request path.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def chunk_bounds(n: int, k: int) -> List[Tuple[int, int]]:
+    """K contiguous [start, stop) chunks covering range(n) — first
+    ``n % k`` chunks one element longer (numpy array_split convention),
+    so any leaf size shards over any replica count, empty chunks
+    included."""
+    if k < 1:
+        raise ValueError(f"need k >= 1 chunks, got {k}")
+    base, extra = divmod(n, k)
+    out, start = [], 0
+    for i in range(k):
+        size = base + (1 if i < extra else 0)
+        out.append((start, start + size))
+        start += size
+    return out
+
+
+def _leaves(state: Any) -> List[np.ndarray]:
+    return [np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(state)]
+
+
+def merge_replica_states(states: Sequence[Any]) -> Any:
+    """Disjoint-support merge of K replica states (same treedef) into
+    one: replica i contributes chunk i of every raveled leaf, scattered
+    into zeros and summed.  Bit-identical to each input iff the
+    replicas agree (see module docstring); returns a state pytree with
+    the first replica's treedef."""
+    states = list(states)
+    if not states:
+        raise ValueError("merge_replica_states needs >= 1 replica state")
+    k = len(states)
+    flats = [_leaves(s) for s in states]
+    treedef = jax.tree_util.tree_structure(states[0])
+    n_leaves = len(flats[0])
+    for i, f in enumerate(flats[1:], 1):
+        if len(f) != n_leaves:
+            raise ValueError(f"replica {i} has {len(f)} leaves, replica 0 "
+                             f"has {n_leaves} — states are not congruent")
+    merged: List[np.ndarray] = []
+    for leaf_idx in range(n_leaves):
+        ref = flats[0][leaf_idx]
+        bounds = chunk_bounds(ref.size, k)
+        # zero-padded disjoint partials + sum — each element is one real
+        # value plus zeros (the _co_allreduce_dense reassembly, with
+        # np.add standing in for psum on host arrays)
+        acc = np.zeros(ref.size, dtype=ref.dtype)
+        for r, (a, b) in enumerate(bounds):
+            part = np.zeros(ref.size, dtype=ref.dtype)
+            part[a:b] = flats[r][leaf_idx].reshape(-1)[a:b]
+            acc = np.add(acc, part)
+        merged.append(acc.reshape(ref.shape))
+    return jax.tree_util.tree_unflatten(treedef, merged)
+
+
+def states_bitwise_equal(a: Any, b: Any) -> bool:
+    """True iff two state pytrees agree leaf-for-leaf, bit-for-bit
+    (dtype and content; NaNs compared by bit pattern, not by IEEE
+    semantics — a reconciler must treat two identical NaN payloads as
+    'same state', not 'diverged')."""
+    fa, fb = _leaves(a), _leaves(b)
+    if len(fa) != len(fb):
+        return False
+    for la, lb in zip(fa, fb):
+        if la.dtype != lb.dtype or la.shape != lb.shape:
+            return False
+        if la.tobytes() != lb.tobytes():
+            return False
+    return True
+
+
+def state_divergence(a: Any, b: Any) -> List[str]:
+    """Human-readable description of where two states diverge (empty if
+    bit-identical) — reconciliation reports name the drifted leaves."""
+    out: List[str] = []
+    paths_a = jax.tree_util.tree_flatten_with_path(a)[0]
+    paths_b = jax.tree_util.tree_flatten_with_path(b)[0]
+    if len(paths_a) != len(paths_b):
+        return [f"leaf count differs: {len(paths_a)} vs {len(paths_b)}"]
+    for (ka, la), (_, lb) in zip(paths_a, paths_b):
+        la, lb = np.asarray(la), np.asarray(lb)
+        where = jax.tree_util.keystr(ka)
+        if la.dtype != lb.dtype or la.shape != lb.shape:
+            out.append(f"{where}: {la.dtype}{la.shape} vs "
+                       f"{lb.dtype}{lb.shape}")
+        elif la.tobytes() != lb.tobytes():
+            # byte-level count works for every leaf, 0-d scalars included
+            ba = np.frombuffer(la.tobytes(), np.uint8)
+            bb = np.frombuffer(lb.tobytes(), np.uint8)
+            out.append(f"{where}: {int(np.sum(ba != bb))} differing byte(s)")
+    return out
+
+
+def state_finite(state: Any) -> bool:
+    """Host-side finiteness probe over every float leaf (the reconciler
+    must never crown a diverged/NaN replica authoritative)."""
+    for leaf in _leaves(state):
+        if np.issubdtype(leaf.dtype, np.floating) and \
+                not np.all(np.isfinite(leaf)):
+            return False
+    return True

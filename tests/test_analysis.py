@@ -317,6 +317,16 @@ def test_quarantine_rollback_contract_holds():
     assert check_quarantine_rollback() == []
 
 
+def test_router_exactly_once_contract_holds():
+    from repro.analysis.contracts import check_router_exactly_once
+    assert check_router_exactly_once() == []
+
+
+def test_replica_merge_contract_holds():
+    from repro.analysis.contracts import check_replica_merge
+    assert check_replica_merge() == []
+
+
 def test_barrier_scanner_sees_through_jit_and_scan():
     """Unit coverage for the jaxpr walker the DP-seam check rides on."""
     import jax

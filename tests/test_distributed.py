@@ -137,3 +137,26 @@ def test_compact_projection_shardings_use_hj_axis():
     assert sh.projs[0].w.spec == P("model", None, None)
     assert sh.projs[0].table.spec == P("model", None)
     assert sh.readout.w.spec == P("model", None)  # dense: proj_pre rule
+
+
+# ---------------------------------------------------------- step timer --
+
+def test_step_timer_stop_without_start_is_a_clear_error():
+    """Regression: StepTimer.stop() with no open window used to crash
+    with a bare TypeError from ``None`` arithmetic; it must name the
+    misuse instead.  A stop also CLOSES the window, so a double stop is
+    the same caller bug."""
+    from repro.distributed.fault import StepTimer
+
+    t = StepTimer()
+    with pytest.raises(RuntimeError, match="without a prior start"):
+        t.stop(step=0)
+    with pytest.raises(RuntimeError, match="stop\\(step=7, tag='fold'\\)"):
+        t.stop(step=7, tag="fold")
+    t.start()
+    dt = t.stop(step=1, tag="a")
+    assert dt >= 0.0 and t._t0 is None
+    with pytest.raises(RuntimeError, match="without a prior start"):
+        t.stop(step=1)  # double stop: the window is already closed
+    t.start()
+    assert t.stop(step=2) >= 0.0  # normal pairing keeps working

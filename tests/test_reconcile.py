@@ -1,0 +1,176 @@
+"""Replica-reconciliation tests (serve/reconcile.py): the generalized
+disjoint-support merge's unit contracts, the broadcast-replica protocol
+against a single reference engine (bit-exact), and the hypothesis
+property (CI installs hypothesis; skipped where it is absent) that
+merging replicas of any served feedback prefix is bit-identical to
+serving the interleaved stream on one engine with
+``feedback_eager=False``."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bcpnn_models import deep_synth_spec
+from repro.core import init_deep, supervised_readout_step
+from repro.serve import (
+    BCPNNService, chunk_bounds, cycle_batch, merge_replica_states,
+    state_divergence, state_finite, states_bitwise_equal,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # local runs without the optional dep; CI has it
+    given = None
+
+
+@functools.lru_cache(maxsize=None)
+def _net():
+    spec = deep_synth_spec(side=6, depth=1, n_classes=3, hidden_hc=4,
+                           hidden_mc=8, backend="jnp")
+    return spec, init_deep(spec, jax.random.PRNGKey(0))
+
+
+def _stream(spec, n, seed):
+    rng = np.random.default_rng(seed)
+    xs = rng.random((n, spec.input_geom.N)).astype(np.float32)
+    ys = rng.integers(0, spec.n_classes, size=n).astype(np.int32)
+    return xs, ys
+
+
+FEEDBACK_BATCH = 4
+
+
+@functools.lru_cache(maxsize=None)
+def _readout_step():
+    spec, _ = _net()
+    return jax.jit(lambda st_, x, y: supervised_readout_step(
+        st_, spec, x, y))
+
+
+def _replay(state, xs, ys):
+    """The engine's feedback_eager=False fold compositions: full batches
+    in stream order, one cycled tail (the offline form test_serve pins
+    bit-exactly against the served engine)."""
+    fn = _readout_step()
+    items = list(zip(xs, ys))
+    while items:
+        chunk, items = items[:FEEDBACK_BATCH], items[FEEDBACK_BATCH:]
+        x, y = cycle_batch(chunk, FEEDBACK_BATCH)
+        state = fn(state, jnp.asarray(x), jnp.asarray(y))
+    return state
+
+
+# ------------------------------------------------------------ chunking --
+
+def test_chunk_bounds_cover_range_disjointly():
+    for n, k in [(0, 1), (1, 1), (7, 3), (8, 2), (3, 5), (10, 10),
+                 (1, 4), (100, 7)]:
+        bounds = chunk_bounds(n, k)
+        assert len(bounds) == k
+        assert bounds[0][0] == 0 and bounds[-1][1] == n
+        for (a0, b0), (a1, b1) in zip(bounds, bounds[1:]):
+            assert b0 == a1 and a0 <= b0  # contiguous, non-overlapping
+        # array_split convention: first n % k chunks one longer
+        sizes = [b - a for a, b in bounds]
+        assert sizes == sorted(sizes, reverse=True)
+        assert sum(sizes) == n
+    with pytest.raises(ValueError, match="k >= 1"):
+        chunk_bounds(4, 0)
+
+
+# --------------------------------------------------------------- merge --
+
+def test_merge_of_agreeing_replicas_is_bit_identical():
+    spec, state0 = _net()
+    xs, ys = _stream(spec, 11, seed=1)
+    s = _replay(state0, xs, ys)
+    for k in (1, 2, 3, 4):
+        merged = merge_replica_states([s] * k)
+        assert states_bitwise_equal(merged, s)
+        assert state_divergence(merged, s) == []
+
+
+def test_merge_exposes_a_diverged_replica():
+    """If replicas disagree, the merged state cannot equal all of them —
+    the detection contract reconcile() rests on."""
+    spec, state0 = _net()
+    xs, ys = _stream(spec, 8, seed=2)
+    a = _replay(state0, xs, ys)
+    b = state0  # a stale replica
+    merged = merge_replica_states([a, b])
+    assert not (states_bitwise_equal(merged, a)
+                and states_bitwise_equal(merged, b))
+    div = state_divergence(a, b)
+    assert div and any("byte" in d for d in div)
+
+
+def test_merge_rejects_incongruent_states():
+    with pytest.raises(ValueError, match="at least|>= 1"):
+        merge_replica_states([])
+    with pytest.raises(ValueError, match="congruent"):
+        merge_replica_states([{"a": np.ones(3), "b": np.ones(2)},
+                              {"a": np.ones(3)}])
+
+
+def test_bitwise_equal_uses_bit_patterns_not_ieee():
+    nan = np.array([np.nan, 1.0], np.float32)
+    assert states_bitwise_equal({"w": nan}, {"w": nan.copy()})
+    assert not states_bitwise_equal({"w": nan},
+                                    {"w": np.array([np.nan, 2.0],
+                                                   np.float32)})
+    assert not states_bitwise_equal({"w": np.ones(2, np.float32)},
+                                    {"w": np.ones(2, np.float64)})
+    assert not state_finite({"w": nan})
+    assert state_finite({"w": np.ones(2, np.float32),
+                         "idx": np.array([1, 2], np.int32)})
+
+
+# ------------------------------------- broadcast-replica protocol (live) --
+
+def test_merged_broadcast_replicas_match_single_engine_bitwise():
+    """Two replica engines fed the same broadcast stream, merged, equal
+    the ONE engine serving the interleaved stream — all with
+    feedback_eager=False, all bit-exact."""
+    spec, state0 = _net()
+    xs, ys = _stream(spec, 14, seed=3)  # 3 full batches + cycled tail 2
+    engines = [BCPNNService(state0, spec, online_learning=True,
+                            feedback_batch=FEEDBACK_BATCH,
+                            feedback_eager=False).start(warmup=False)
+               for _ in range(3)]  # replica A, replica B, reference
+    for svc in engines:
+        for x, y in zip(xs, ys):
+            svc.feedback(x, int(y))
+    for svc in engines:
+        svc.stop()  # drains: folds every buffered batch incl. the tail
+    rep_a, rep_b, ref = (svc.state for svc in engines)
+    merged = merge_replica_states([rep_a, rep_b])
+    assert states_bitwise_equal(merged, ref), state_divergence(merged, ref)
+    assert not states_bitwise_equal(ref, state0)  # it actually learned
+
+
+# ------------------------------------------------ hypothesis property --
+
+if given is not None:
+    @settings(deadline=None, max_examples=12)
+    @given(n=st.integers(1, 25), k=st.integers(1, 4),
+           seed=st.integers(0, 2 ** 16 - 1))
+    def test_merge_bit_identical_to_interleaved_serve_property(n, k, seed):
+        """Satellite 3: for ANY feedback stream, replicas produced by
+        the broadcast protocol (each serving the full stream,
+        feedback_eager=False compositions) merge bit-identically to the
+        single-engine serve of the interleaved stream.  Replicas are
+        replayed independently — the property also witnesses that the
+        fold program is a pure function of the stream prefix."""
+        spec, state0 = _net()
+        xs, ys = _stream(spec, n, seed)
+        ref = _replay(state0, xs, ys)
+        replicas = [_replay(state0, xs, ys) for _ in range(k)]
+        merged = merge_replica_states(replicas)
+        assert states_bitwise_equal(merged, ref), \
+            state_divergence(merged, ref)
+else:  # pragma: no cover - exercised only without hypothesis installed
+    @pytest.mark.skip(reason="optional dep: property test needs hypothesis")
+    def test_merge_bit_identical_to_interleaved_serve_property():
+        pass
