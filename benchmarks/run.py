@@ -8,6 +8,9 @@ Prints ``name,value,unit`` CSV rows:
                             (writes BENCH_kernels.json)
   * bench_roofline_bcpnn  — Fig. 6 roofline placement (TPU target)
   * bench_lm_rooflines    — assigned-arch dry-run roofline table
+  * bench_train_dp        — Trainer DP fit images/s at 1/2/4-way CPU
+                            meshes + elastic kill-resume overhead
+                            (writes BENCH_train_dp.json; subprocesses)
 
 ``--assert-patchy-speedup`` is the CI smoke gate for the compact patchy
 schedule: it reruns the kernels bench and fails if the measured
@@ -134,7 +137,8 @@ def main() -> None:
                     help="committed snapshot the speedup gate compares to")
     args = ap.parse_args()
     from . import (bench_bcpnn, bench_kernels, bench_lm_rooflines,
-                   bench_roofline_bcpnn, bench_stream_vs_seq, bench_struct)
+                   bench_roofline_bcpnn, bench_stream_vs_seq, bench_struct,
+                   bench_train_dp)
 
     kernels_kw = {}
     if args.scale is not None:
@@ -182,11 +186,13 @@ def main() -> None:
         "kernels": run_kernels,
         "bcpnn": bench_bcpnn.run,
         "struct": bench_struct.run,
+        "train_dp": bench_train_dp.run,
         "quant_accuracy": assert_quant_accuracy,
     }
     selected = (args.only.split(",") if args.only
                 else [k for k in benches
-                      if not (args.quick and k in ("bcpnn", "struct"))
+                      if not (args.quick and k in ("bcpnn", "struct",
+                                                   "train_dp"))
                       and k != "quant_accuracy"])
     if args.assert_quant_accuracy and "quant_accuracy" not in selected:
         selected.append("quant_accuracy")

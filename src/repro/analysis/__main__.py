@@ -52,7 +52,8 @@ def main(argv: List[str] = None) -> int:
                         help="additionally run the jaxpr/contract checks "
                              "(all, or a comma-separated subset: "
                              "donation-guard, recompile-sentinel, dp-seams, "
-                             "pallas-plans, quarantine-rollback)")
+                             "masked-seams, pallas-plans, "
+                             "quarantine-rollback)")
     args = parser.parse_args(argv)
 
     root = repo_root()

@@ -13,6 +13,12 @@ these checks run tiny real programs and inspect what jax actually built:
   jaxpr and asserts the PR 4 seam set is present in both (the
   precondition for the bit-exact DP equivalence; see
   core/traces.py, core/network.py, distributed/data_parallel.py).
+* ``masked-seams`` — same discipline for the masked tail-batch learn
+  (DESIGN.md §12): the ``masked_inputs`` pin (x, y, valid) and the
+  masked-product pins must appear in the single-device masked step AND
+  in the shard_map masked epoch program (where the product pin carries
+  the column-sharded ``yv_l`` as well) — the precondition for padded
+  fits staying bit-exact across meshes.
 * ``donation-guard`` — replays the PR 6 bug: a ``cached_table`` result
   whose buffer is consumed by a donating jit must be REBUILT on the next
   call, never returned dead (core/compact.py's ``_deleted`` guard).
@@ -221,6 +227,64 @@ def check_dp_seams() -> List[str]:
              "(trace all-reduce pin, distributed._co_allreduce_dense)")
     _require(problems, sigs_n, stats, 1, "data-parallel step",
              "(batch-stats pin — the all-reduced stats fold)")
+    return problems
+
+
+def check_masked_seams() -> List[str]:
+    """The masked tail-learning barrier seams (PR 10) are present in both
+    the single-device masked step and the shard_map masked epoch."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from ..core.network import (
+        init_network, make_network_spec, train_projection_step,
+    )
+    from ..distributed.data_parallel import (
+        make_data_parallel_projection_epoch,
+    )
+
+    b, n_shards, nb = 8, 2, 2
+    spec = make_network_spec((4, 3), [(4, 5)], 3, backend="jnp")
+    ni, nj = spec.input_geom.N, spec.projs[0].post.N          # 12, 20
+    state = init_network(spec, jax.random.PRNGKey(0))
+    x = jnp.zeros((b, ni), jnp.float32)
+    v = jnp.zeros((b,), jnp.float32)
+
+    def shape(*dims: int) -> str:
+        return f"float32[{','.join(str(d) for d in dims)}]"
+
+    masked_in = tuple(sorted((shape(b, ni), shape(b, nj), shape(b))))
+    problems: List[str] = []
+    single = jax.make_jaxpr(
+        lambda st, xx, vv: train_projection_step(st, spec, xx, 0, valid=vv)
+    )(state, x, v)
+    sigs_1 = _barrier_signatures(single)
+    _require(problems, sigs_1, masked_in, 1, "single-device masked step",
+             "(masked-input pin, core/bcpnn_layer.masked_inputs)")
+    _require(problems, sigs_1,
+             tuple(sorted((shape(b, ni), shape(b, nj)))), 1,
+             "single-device masked step",
+             "(masked-product pin, core/bcpnn_layer.learn_masked)")
+
+    if len(jax.devices()) < n_shards:
+        problems.append(
+            f"masked dp epoch: needs >= {n_shards} devices, found "
+            f"{len(jax.devices())} — run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards}")
+        return problems
+
+    mesh = Mesh(jax.devices()[:n_shards], ("data",))
+    dp_epoch = make_data_parallel_projection_epoch(spec, mesh, masked=True)
+    hs = jnp.zeros((nb, b, ni), jnp.float32)
+    valid = jnp.zeros((nb, b), jnp.float32)
+    sigs_n = _barrier_signatures(jax.make_jaxpr(dp_epoch)(state, hs, valid))
+    nj_l = nj // n_shards
+    _require(problems, sigs_n, masked_in, 1, "data-parallel masked epoch",
+             "(masked-input pin mirroring core/bcpnn_layer.masked_inputs)")
+    _require(problems, sigs_n,
+             tuple(sorted((shape(b, ni), shape(b, nj), shape(b, nj_l)))), 1,
+             "data-parallel masked epoch",
+             "(masked sharded-product pin, distributed._learn_sharded)")
     return problems
 
 
@@ -478,6 +542,7 @@ CONTRACTS: Dict[str, Callable[[], List[str]]] = {
     "donation-guard": check_donation_guard,
     "recompile-sentinel": check_recompile_sentinel,
     "dp-seams": check_dp_seams,
+    "masked-seams": check_masked_seams,
     "pallas-plans": check_pallas_plans,
     "quarantine-rollback": check_quarantine_rollback,
     "router-exactly-once": check_router_exactly_once,

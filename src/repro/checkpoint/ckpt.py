@@ -120,6 +120,17 @@ class CheckpointManager:
                                "manifest.json")) as f:
             return json.load(f).get("extra")
 
+    def resume_point(self) -> Optional[Tuple[int, dict]]:
+        """``(step, extra)`` of the latest checkpoint, or None when the
+        directory holds none — the one-call lookup the elastic-restart
+        ladder uses before rebuilding a mesh (DESIGN.md §12): the
+        ``extra`` carries the spec and, for mid-fit checkpoints, the
+        ``FitCursor`` naming the next work item."""
+        step = self.latest_step()
+        if step is None:
+            return None
+        return step, self.read_extra(step) or {}
+
     def restore(self, step: int, target: Any, shardings: Any = None) -> Any:
         """Restore into the structure of `target`, resharding elastically.
 

@@ -27,7 +27,7 @@ from .network import (
     unsupervised_step,
 )
 from .trainer import (
-    Trainer, eval_batches, evaluate_padded, supervised_epoch,
+    FitCursor, Trainer, eval_batches, evaluate_padded, supervised_epoch,
     unsupervised_epoch, unsupervised_layer_epoch,
 )
 from .head import (
@@ -49,7 +49,7 @@ __all__ = [
     "online_learn_step", "spec_from_dict", "spec_to_dict",
     "stack_rates", "supervised_readout_step", "supervised_step",
     "train_projection_step", "unsupervised_layer_step", "unsupervised_step",
-    "Trainer", "eval_batches", "evaluate_padded", "supervised_epoch",
+    "FitCursor", "Trainer", "eval_batches", "evaluate_padded", "supervised_epoch",
     "unsupervised_epoch", "unsupervised_layer_epoch",
     "BCPNNHeadConfig", "encode_features", "head_predict", "head_supervised",
     "head_unsupervised", "init_head",

@@ -439,6 +439,48 @@ def _learn_jnp(proj: Projection, spec: ProjSpec, x: jax.Array, y: jax.Array) -> 
                              jnp.mean(y, axis=0), (x.T @ y) / b)
 
 
+def masked_inputs(x: jax.Array, y: jax.Array, valid: jax.Array):
+    """Pin and pad-zero one masked stat seam: returns ``(xv, yv, n)``
+    where rows with ``valid == 0`` are zeroed and ``n`` is the REAL row
+    count (clamped to 1 so an all-pad batch stays finite).
+
+    The inert-pad contract mirrors ``kernels/padding.py``: a pad row
+    contributes exact zeros to every sum, so dividing the sums by ``n``
+    IS the mean over genuine rows.  The barrier pins the mask products so
+    the single-device and data-parallel masked programs multiply the same
+    materialized buffers (distributed/data_parallel.py mirrors this seam)."""
+    x, y, valid = jax.lax.optimization_barrier((x, y, valid))
+    v = valid.astype(x.dtype)
+    n = jnp.maximum(jnp.sum(v), 1.0)
+    xv = x * v[:, None]
+    yv = y * v[:, None]
+    return xv, yv, n
+
+
+def learn_masked(proj: Projection, spec: ProjSpec, x: jax.Array,
+                 y: jax.Array, valid: jax.Array) -> Projection:
+    """Plasticity step over a zero-padded tail batch: batch stats divide
+    by the number of GENUINE rows (``valid`` 0/1 per row), so pad slots
+    are inert rather than diluting the traces.
+
+    Scope: like the data-parallel steps, this always computes stats on
+    the jnp path even for ``backend="pallas"`` specs — the fused kernels
+    bake the batch size into their grid as a static divisor, so a traced
+    valid count cannot flow through them.  Only the tail batch of a fit
+    takes this path (whole batches keep the backend dispatch of
+    ``learn`` bit-for-bit)."""
+    xv, yv, n = masked_inputs(x, y, valid)
+    xv, yv = jax.lax.optimization_barrier((xv, yv))
+    xm = jnp.sum(xv, axis=0) / n
+    ym = jnp.sum(yv, axis=0) / n
+    if is_compact(spec) and proj.table is not None:
+        co_c = _compact_ops().compact_co_stats(
+            xv, yv, proj.table, spec.pre.M, spec.post.M, n_valid=n)
+        return _compact_ops().apply_compact_stats(proj, spec, xm, ym, co_c)
+    co = (xv.T @ yv) / n
+    return apply_dense_stats(proj, spec, xm, ym, co)
+
+
 def maybe_rewire(proj: Projection, spec: ProjSpec) -> Projection:
     """Trace-counter-keyed structural plasticity: rewire when the
     projection's own trace clock hits a ``struct_every`` multiple, else

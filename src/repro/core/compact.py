@@ -213,18 +213,24 @@ def compact_support(x: jax.Array, w_c: jax.Array, b: jax.Array,
 
 
 def compact_co_stats(x: jax.Array, y: jax.Array, table: jax.Array,
-                     mi: int, mj: int) -> jax.Array:
+                     mi: int, mj: int, n_valid=None) -> jax.Array:
     """Batch-mean compact co-activation ⟨x⊗y⟩ restricted to live pairs:
     (Hj, K, Mj).  The canonical stat contraction — the data-parallel step
     computes the same einsum on post-HC shards and all-reduces the
-    disjoint partials (distributed/data_parallel.py)."""
+    disjoint partials (distributed/data_parallel.py).
+
+    ``n_valid`` (optional traced scalar) overrides the static batch-size
+    divisor: the masked tail-batch path passes pad-zeroed ``x``/``y``
+    plus the REAL row count so the mean divides by genuine samples only
+    (DESIGN.md §12).  ``None`` keeps the static ``/ b`` bit-for-bit."""
     x, y = jax.lax.optimization_barrier((x, y))  # one buffer per stat seam
     b = x.shape[0]
     hj = table.shape[0]
     ui = unit_indices(table, mi, sentinel=x.shape[1])
     xg = gather_pre(x, ui)                              # (Hj, B, K)
     y3 = y.reshape(b, hj, mj).transpose(1, 0, 2)        # (Hj, B, Mj)
-    return jnp.einsum("jbk,jbm->jkm", xg, y3) / b
+    return jnp.einsum("jbk,jbm->jkm", xg, y3) / (b if n_valid is None
+                                                 else n_valid)
 
 
 def fold_weights_compact(pij_c: jax.Array, log_pi: jax.Array,

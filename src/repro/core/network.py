@@ -39,6 +39,7 @@ from .bcpnn_layer import (
     forward,
     init_projection,
     learn,
+    learn_masked,
     maybe_rewire,
     normalize,
     pack_projection,
@@ -247,16 +248,27 @@ def _noisy_rates(proj: Projection, pspec: ProjSpec, h: jax.Array,
 
 
 def train_projection_step(state: DeepState, spec: NetworkSpec, h: jax.Array,
-                          layer: int) -> DeepState:
+                          layer: int,
+                          valid: Optional[jax.Array] = None) -> DeepState:
     """Plasticity on stack projection ``layer`` given its DIRECT input
     rates ``h`` (i.e. the frozen lower layers already applied).  The
     trainer uses this to hoist the frozen forward out of the epoch loop:
     during layer ``l``'s greedy phase the representation below it is
-    deterministic, so it is computed once per phase, not once per step."""
+    deterministic, so it is computed once per phase, not once per step.
+
+    ``valid`` (optional, (B,) 0/1) marks genuine rows of a zero-padded
+    tail batch: the noisy forward still runs on every row (pad rows cost
+    flops, nothing else), but the plasticity stats divide by the REAL row
+    count (``learn_masked``) so pad slots are inert.  ``None`` keeps the
+    whole-batch ``learn`` dispatch bit-for-bit."""
     pspec = spec.projs[layer]
     key, sub = jax.random.split(state.key)
     y = _noisy_rates(state.projs[layer], pspec, h, sub)
-    proj = maybe_rewire(learn(state.projs[layer], pspec, h, y), pspec)
+    if valid is None:
+        proj = learn(state.projs[layer], pspec, h, y)
+    else:
+        proj = learn_masked(state.projs[layer], pspec, h, y, valid)
+    proj = maybe_rewire(proj, pspec)
     projs = state.projs[:layer] + (proj,) + state.projs[layer + 1:]
     return DeepState(projs=projs, readout=state.readout,
                      step=state.step + 1, key=key)
@@ -271,12 +283,18 @@ def unsupervised_layer_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
 
 
 def supervised_readout_step(state: DeepState, spec: NetworkSpec, x: jax.Array,
-                            labels: jax.Array) -> DeepState:
+                            labels: jax.Array,
+                            valid: Optional[jax.Array] = None) -> DeepState:
     """One streaming batch of the supervised readout (labels: (B,) int).
-    The stack is frozen; only the readout projection learns."""
+    The stack is frozen; only the readout projection learns.  ``valid``
+    masks pad rows out of the readout stats (pad labels one-hot to class
+    0, but their rows are zeroed before any stat sees them)."""
     h = stack_rates(state, spec, x)
     y = jax.nn.one_hot(labels, spec.n_classes, dtype=h.dtype)
-    ro = learn(state.readout, spec.readout, h, y)
+    if valid is None:
+        ro = learn(state.readout, spec.readout, h, y)
+    else:
+        ro = learn_masked(state.readout, spec.readout, h, y, valid)
     return DeepState(projs=state.projs, readout=ro,
                      step=state.step + 1, key=state.key)
 

@@ -8,12 +8,21 @@ frozen feature extractors while a layer trains), then ONE supervised pass
 on the readout projection, then inference.  Epochs run as a single jit'd
 ``lax.scan`` over batch-major data, so a whole epoch is one device
 program — the TPU analogue of keeping the FPGA pipeline hot.
+
+Fault-tolerant data-parallel fit (DESIGN.md §12): ``Trainer(cfg,
+mesh=...)`` runs each epoch as the shard_map scan-over-batches program
+(``distributed.data_parallel``) — bit-for-bit equal to the single-device
+epoch — and ``fit(ckpt_dir=..., ckpt_every_batches=k)`` checkpoints
+mid-fit with a schedule cursor in the manifest, so a fit interrupted by
+worker loss resumes exactly where it stopped on whatever mesh
+``elastic_mesh`` can still build.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,12 +43,6 @@ from .network import (
 )
 
 
-def _batchify(x: np.ndarray, batch: int) -> np.ndarray:
-    """Trim to a whole number of batches and reshape batch-major."""
-    nb = x.shape[0] // batch
-    return x[: nb * batch].reshape(nb, batch, *x.shape[1:])
-
-
 def _batchify_padded(x: np.ndarray, batch: int):
     """Zero-pad to a whole number of batches; also return the (nb, B)
     validity mask marking genuine rows.  Unlike ``_batchify`` this loses
@@ -53,6 +56,28 @@ def _batchify_padded(x: np.ndarray, batch: int):
     valid = (np.arange(nb * batch) < n).astype(np.float32)
     return (x.reshape(nb, batch, *x.shape[1:]),
             valid.reshape(nb, batch))
+
+
+@dataclasses.dataclass(frozen=True)
+class FitCursor:
+    """Where a fit stopped in the layerwise-greedy schedule — stored in
+    the checkpoint manifest ``extra`` next to the spec, so a resumed fit
+    (possibly on a rebuilt mesh) continues EXACTLY where the interrupted
+    one left off.  ``batch`` counts batches of the current epoch already
+    consumed; the cursor always names the NEXT work item."""
+
+    phase: str = "unsupervised"   # "unsupervised" | "supervised" | "done"
+    layer: int = 0
+    epoch: int = 0
+    batch: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FitCursor":
+        return cls(phase=str(d["phase"]), layer=int(d["layer"]),
+                   epoch=int(d["epoch"]), batch=int(d["batch"]))
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "layer"),
@@ -107,6 +132,35 @@ def supervised_epoch(state: DeepState, spec_or_cfg, xs: jax.Array,
     return _supervised_epoch(state, as_spec(spec_or_cfg), xs, ys)
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "layer"),
+                   donate_argnums=(0,))
+def _train_projection_epoch_masked(state: DeepState, spec: NetworkSpec,
+                                   hs: jax.Array, valid: jax.Array,
+                                   layer: int) -> DeepState:
+    """The masked twin of ``_train_projection_epoch``: ``valid`` (nb, B)
+    marks genuine rows, so the zero-padded tail batch divides its stats
+    by the REAL row count instead of diluting the traces (or, before the
+    pad existed at all, being silently dropped).  Only fits whose data
+    does not divide the batch take this program — whole-batch fits keep
+    the unmasked epoch (and its fused-kernel dispatch) bit-for-bit."""
+    def body(st, hv):
+        h, v = hv
+        return train_projection_step(st, spec, h, layer, valid=v), None
+    state, _ = jax.lax.scan(body, state, (hs, valid))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def _supervised_epoch_masked(state: DeepState, spec: NetworkSpec,
+                             xs: jax.Array, ys: jax.Array,
+                             valid: jax.Array) -> DeepState:
+    def body(st, xyv):
+        x, y, v = xyv
+        return supervised_readout_step(st, spec, x, y, valid=v), None
+    state, _ = jax.lax.scan(body, state, (xs, ys, valid))
+    return state
+
+
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _eval_batches(state: DeepState, spec: NetworkSpec, xs: jax.Array,
                   ys: jax.Array, valid: jax.Array) -> jax.Array:
@@ -153,12 +207,79 @@ class Trainer:
     Accepts either a legacy ``BCPNNConfig`` (the paper's depth-1 network)
     or a ``NetworkSpec`` of any depth; ``epochs`` in ``fit`` applies per
     stack projection (layerwise greedy schedule).
+
+    ``mesh`` (optional ``jax.sharding.Mesh`` with a ``data_axis`` axis)
+    turns every epoch into the shard_map data-parallel program — batches
+    shard over rows, learning all-reduces disjoint-support trace partials
+    (distributed/data_parallel.py), and the resulting state is
+    bit-for-bit what the single-device fit produces.  Checkpointing and
+    cursor resume (``fit``'s ``ckpt_*``/``resume`` arguments) work in
+    both modes and across mesh changes, which is what makes worker-loss
+    recovery exact: rebuild a smaller mesh with ``elastic_mesh``, resume
+    from the cursor, and the final state matches the uninterrupted run.
     """
 
-    def __init__(self, cfg, seed: int = 0):
+    def __init__(self, cfg, seed: int = 0, mesh=None,
+                 data_axis: str = "data"):
         self.cfg = cfg
         self.spec = as_spec(cfg)
         self.state = init_deep(self.spec, jax.random.PRNGKey(seed))
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.timer = None  # the last fit's StepTimer
+        self._epoch_cache: Dict[tuple, Callable] = {}
+        if mesh is not None:
+            # Fail at construction, not mid-fit: every projection the DP
+            # programs touch needs whole post-HCs per shard.
+            from ..distributed.data_parallel import _check_geometry
+            _check_geometry(self.spec, self.spec.depth - 1,
+                            mesh.shape[data_axis])
+
+    def reset(self, seed: int = 0) -> None:
+        """Re-initialize the network state (fresh PRNG chain) while
+        keeping the compiled epoch programs — what a warmup-then-measure
+        benchmark run wants."""
+        self.state = init_deep(self.spec, jax.random.PRNGKey(seed))
+
+    # -------------------------------------------------- epoch programs --
+    def _unsup_fn(self, layer: int, masked: bool) -> Callable:
+        """Epoch program for one greedy phase — single-device jit or the
+        mesh's shard_map scan, cached per (layer, masked)."""
+        key = ("unsup", layer, masked)
+        if key not in self._epoch_cache:
+            if self.mesh is None:
+                if masked:
+                    fn = lambda st, hs, v: _train_projection_epoch_masked(  # noqa: E731
+                        st, self.spec, hs, v, layer)
+                else:
+                    fn = lambda st, hs: _train_projection_epoch(  # noqa: E731
+                        st, self.spec, hs, layer)
+            else:
+                from ..distributed.data_parallel import (
+                    make_data_parallel_projection_epoch)
+                fn = make_data_parallel_projection_epoch(
+                    self.spec, self.mesh, layer=layer, axis=self.data_axis,
+                    masked=masked)
+            self._epoch_cache[key] = fn
+        return self._epoch_cache[key]
+
+    def _sup_fn(self, masked: bool) -> Callable:
+        key = ("sup", masked)
+        if key not in self._epoch_cache:
+            if self.mesh is None:
+                if masked:
+                    fn = lambda st, xs, ys, v: _supervised_epoch_masked(  # noqa: E731
+                        st, self.spec, xs, ys, v)
+                else:
+                    fn = lambda st, xs, ys: _supervised_epoch(  # noqa: E731
+                        st, self.spec, xs, ys)
+            else:
+                from ..distributed.data_parallel import (
+                    make_data_parallel_supervised_epoch)
+                fn = make_data_parallel_supervised_epoch(
+                    self.spec, self.mesh, axis=self.data_axis, masked=masked)
+            self._epoch_cache[key] = fn
+        return self._epoch_cache[key]
 
     def fit(
         self,
@@ -167,40 +288,155 @@ class Trainer:
         epochs: int,
         batch: int = 128,
         log: bool = False,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every_batches: int = 0,
+        resume: bool = False,
+        on_chunk: Optional[Callable[[FitCursor], None]] = None,
     ) -> Dict[str, float]:
         """Layerwise unsupervised epochs + one supervised pass.
+
+        The tail batch is zero-padded and masked, never dropped: a fit on
+        n samples trains on all n (stats divide by genuine rows —
+        ``learn_masked``), where it used to silently discard up to
+        ``batch - 1`` of them.  Whole-batch data takes the exact same
+        programs as before.
+
+        Fault tolerance: with ``ckpt_dir`` + ``ckpt_every_batches > 0``
+        the fit checkpoints every k batches (state + spec + schedule
+        cursor, blocking) and ``resume=True`` continues from the latest
+        such checkpoint.  ``on_chunk(cursor)`` fires after every chunk
+        (post-checkpoint) — the fault-injection seam: raising
+        ``WorkerLost`` from it aborts the fit with the checkpoint
+        already on disk.  With ``ckpt_dir`` alone the fit writes one
+        final resumable checkpoint.
 
         Returns timings (per-image latency covers the whole unsupervised
         phase, i.e. depth * epochs passes over the data).
         """
-        xs = jnp.asarray(_batchify(x_train, batch))
-        ys = jnp.asarray(_batchify(y_train, batch))
+        from ..distributed.fault import StepTimer
+
+        xs_np, valid_np = _batchify_padded(np.asarray(x_train), batch)
+        ys_np, _ = _batchify_padded(np.asarray(y_train, np.int32), batch)
+        masked = bool(float(valid_np.min()) < 1.0)
+        xs = jnp.asarray(xs_np)
+        ys = jnp.asarray(ys_np)
+        valid = jnp.asarray(valid_np)
+        nb = int(xs.shape[0])
+        if self.mesh is not None:
+            n_shards = int(self.mesh.shape[self.data_axis])
+            if batch % n_shards:
+                raise ValueError(
+                    f"batch={batch} rows cannot shard over the "
+                    f"{n_shards}-way '{self.data_axis}' mesh axis")
+        mgr = CheckpointManager(ckpt_dir) if ckpt_dir is not None else None
+        if resume and mgr is None:
+            raise ValueError("fit(resume=True) requires ckpt_dir")
+        cursor = FitCursor()
+        if resume and mgr.latest_step() is not None:
+            step = mgr.latest_step()
+            extra = mgr.read_extra(step) or {}
+            if "cursor" not in extra:
+                raise ValueError(
+                    f"checkpoint step_{step} under {ckpt_dir} carries no "
+                    f"fit cursor — it is a final artifact, not a mid-fit "
+                    f"checkpoint (restore it with Trainer.restore)")
+            self.state = mgr.restore(step, self.state)
+            cursor = FitCursor.from_dict(extra["cursor"])
+            if log:
+                print(f"  resumed step_{step} at {cursor}")
+        timer = StepTimer()
+        self.timer = timer
+
+        def save(cur: FitCursor) -> None:
+            if mgr is not None and ckpt_every_batches > 0:
+                mgr.save(int(self.state.step), self.state, blocking=True,
+                         extra={"spec": spec_to_dict(self.spec),
+                                "cursor": cur.to_dict()})
+
+        def run_epoch(fn: Callable, operands: tuple, start_b: int,
+                      tag: str, cursor_at: Callable[[int], FitCursor]):
+            """One epoch from batch ``start_b``, in checkpoint-delimited
+            chunks (the whole epoch at once when not checkpointing).
+            Chunking cannot change the result: the scan carries the state
+            through bit-unchanged, and each step's arithmetic is pinned
+            by its optimization barriers."""
+            b0 = start_b
+            while b0 < nb:
+                n = (nb - b0 if ckpt_every_batches <= 0
+                     else min(ckpt_every_batches, nb - b0))
+                sl = tuple(op[b0:b0 + n] for op in operands)
+                timer.start()
+                self.state = fn(self.state, *sl)
+                jax.block_until_ready(self.state)
+                timer.stop(int(self.state.step), tag=tag)
+                b0 += n
+                cur = cursor_at(b0)
+                save(cur)
+                if on_chunk is not None:
+                    on_chunk(cur)
+
         t0 = time.perf_counter()
-        # Greedy phases reuse the frozen representation: ``cur`` holds the
-        # dataset's rates at the current layer's input, computed once per
-        # phase instead of once per step inside every epoch.
-        cur = xs
-        for layer in range(self.spec.depth):
-            for e in range(epochs):
-                self.state = _train_projection_epoch(
-                    self.state, self.spec, cur, layer)
-                if log:
-                    jax.block_until_ready(self.state.projs[layer].w)
-                    print(f"  layer {layer + 1}/{self.spec.depth} "
-                          f"unsupervised epoch {e + 1}/{epochs} done")
-            if layer + 1 < self.spec.depth:
-                cur = _propagate_batches(self.state, self.spec, cur, layer)
+        if cursor.phase == "unsupervised":
+            # Greedy phases reuse the frozen representation: ``cur`` holds
+            # the dataset's rates at the current layer's input, computed
+            # once per phase instead of once per step inside every epoch —
+            # and recomputed (deterministic) up to the cursor on resume.
+            cur = xs
+            for l in range(cursor.layer):
+                cur = _propagate_batches(self.state, self.spec, cur, l)
+            for layer in range(cursor.layer, self.spec.depth):
+                first = layer == cursor.layer
+                fn = self._unsup_fn(layer, masked)
+                operands = (cur, valid) if masked else (cur,)
+                for e in range(cursor.epoch if first else 0, epochs):
+                    start_b = cursor.batch if first and e == cursor.epoch \
+                        else 0
+
+                    def cursor_at(b, layer=layer, e=e):
+                        if b < nb:
+                            return FitCursor("unsupervised", layer, e, b)
+                        if e + 1 < epochs:
+                            return FitCursor("unsupervised", layer, e + 1, 0)
+                        if layer + 1 < self.spec.depth:
+                            return FitCursor("unsupervised", layer + 1, 0, 0)
+                        return FitCursor("supervised", self.spec.depth, 0, 0)
+
+                    run_epoch(fn, operands, start_b,
+                              f"unsup/L{layer}/e{e}", cursor_at)
+                    if log:
+                        print(f"  layer {layer + 1}/{self.spec.depth} "
+                              f"unsupervised epoch {e + 1}/{epochs} done")
+                if layer + 1 < self.spec.depth:
+                    cur = _propagate_batches(self.state, self.spec, cur,
+                                             layer)
+            cursor = FitCursor("supervised", self.spec.depth, 0, 0)
         jax.block_until_ready(self.state.projs[-1].w)
         t1 = time.perf_counter()
-        self.state = supervised_epoch(self.state, self.spec, xs, ys)
+        if cursor.phase == "supervised":
+            fn = self._sup_fn(masked)
+            operands = (xs, ys, valid) if masked else (xs, ys)
+
+            def sup_cursor_at(b):
+                if b < nb:
+                    return FitCursor("supervised", self.spec.depth, 0, b)
+                return FitCursor("done", self.spec.depth, 0, 0)
+
+            run_epoch(fn, operands, cursor.batch, "sup/readout",
+                      sup_cursor_at)
+            cursor = FitCursor("done", self.spec.depth, 0, 0)
         jax.block_until_ready(self.state.readout.w)
         t2 = time.perf_counter()
-        n_img = xs.shape[0] * xs.shape[1]
+        if mgr is not None:
+            mgr.save(int(self.state.step), self.state, blocking=True,
+                     extra={"spec": spec_to_dict(self.spec),
+                            "cursor": cursor.to_dict()})
+        n_img = int(valid_np.sum())
         return {
             "unsup_s": t1 - t0,
             "sup_s": t2 - t1,
             "train_ms_per_img": 1e3 * (t1 - t0)
             / max(1, n_img * epochs * self.spec.depth),
+            "straggler_events": float(len(timer.events)),
         }
 
     def evaluate(self, x: np.ndarray, y: np.ndarray, batch: int = 128) -> float:

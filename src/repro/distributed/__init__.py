@@ -1,6 +1,9 @@
 from .sharding import (DEFAULT_RULES, data_shards, make_rules, named_sharding,
                        projection_shardings, set_context, shard,
                        sharding_context, spec_for)
-from .data_parallel import (make_data_parallel_supervised_step,
+from .data_parallel import (make_data_parallel_projection_epoch,
+                            make_data_parallel_supervised_epoch,
+                            make_data_parallel_supervised_step,
                             make_data_parallel_unsupervised_step)
-from .fault import StepTimer, describe_failure_domains, elastic_mesh
+from .fault import (StepTimer, WorkerLost, describe_failure_domains,
+                    elastic_mesh, fit_mesh_shape, order_devices_host_major)

@@ -45,6 +45,7 @@ from ..core.bcpnn_layer import (
     ProjSpec,
     apply_dense_stats,
     is_compact,
+    masked_inputs,
 )
 from ..core.compact import apply_compact_stats, compact_co_stats, compact_support
 from ..core.hypercolumns import LayerGeom, hc_softmax
@@ -123,18 +124,19 @@ def _co_allreduce_dense(xf: jax.Array, y_l: jax.Array, nj: int, axis: str,
 
 
 def _co_allreduce_compact(xf: jax.Array, y_l: jax.Array, proj: Projection,
-                          pspec: ProjSpec, axis: str,
-                          n_shards: int) -> jax.Array:
+                          pspec: ProjSpec, axis: str, n_shards: int,
+                          n_valid=None) -> jax.Array:
     """Disjoint-support trace all-reduce, compact layout: partials are
     (Hj/n_shards, K, Mj) — nact/Hi smaller than the dense all-reduce.
     The partial is the canonical ``compact_co_stats`` contraction on this
-    device's table rows and post columns (already batch-mean), so the
-    reduced result is bit-identical to the single-device stat."""
+    device's table rows and post columns (already batch-mean, or
+    real-row-mean when ``n_valid`` is given), so the reduced result is
+    bit-identical to the single-device stat."""
     hj, k_units, mj = proj.traces.pij.shape
     hj_l = hj // n_shards
     off = _axis_offset(axis, hj_l)
     tbl = jax.lax.dynamic_slice_in_dim(proj.table, off, hj_l, 0)
-    part = compact_co_stats(xf, y_l, tbl, pspec.pre.M, mj)
+    part = compact_co_stats(xf, y_l, tbl, pspec.pre.M, mj, n_valid=n_valid)
     padded = jax.lax.dynamic_update_slice(
         jnp.zeros((hj, k_units, mj), part.dtype), part, (off, 0, 0))
     return jax.lax.psum(padded, axis)
@@ -142,27 +144,102 @@ def _co_allreduce_compact(xf: jax.Array, y_l: jax.Array, proj: Projection,
 
 def _learn_sharded(proj: Projection, pspec: ProjSpec, xf: jax.Array,
                    yf: jax.Array, y_l: jax.Array, axis: str,
-                   n_shards: int) -> Projection:
+                   n_shards: int, valid=None) -> Projection:
     """One plasticity step from all-reduced stats — the replicated EMA +
-    fold applies the identical ops as the single-device jnp learn."""
-    b = xf.shape[0]
-    xf, yf = jax.lax.optimization_barrier((xf, yf))
-    xm = jnp.mean(xf, axis=0)
-    ym = jnp.mean(yf, axis=0)
+    fold applies the identical ops as the single-device jnp learn.
+
+    ``valid`` (optional, (B,) 0/1, replicated) is the zero-padded
+    tail-batch mask: it mirrors ``core.bcpnn_layer.learn_masked`` —
+    pad rows are zeroed before any stat, and every divisor is the real
+    row count.  The column slice of the masked full activations equals
+    the masked column slice elementwise, so the disjoint-support
+    all-reduce stays bit-exact against the single-device masked learn."""
+    if valid is None:
+        b = xf.shape[0]
+        xf, yf = jax.lax.optimization_barrier((xf, yf))
+        xm = jnp.mean(xf, axis=0)
+        ym = jnp.mean(yf, axis=0)
+        if is_compact(pspec) and proj.table is not None:
+            # already batch-mean: compact_co_stats divides inside the partial
+            co_c = _co_allreduce_compact(xf, y_l, proj, pspec, axis, n_shards)
+            return apply_compact_stats(proj, pspec, xm, ym, co_c)
+        co = _co_allreduce_dense(xf, y_l, pspec.post.N, axis, n_shards) / b
+        return apply_dense_stats(proj, pspec, xm, ym, co)
+    xv, yv, n = masked_inputs(xf, yf, valid)
+    v = valid.astype(y_l.dtype)
+    yv_l = y_l * v[:, None]
+    xv, yv, yv_l = jax.lax.optimization_barrier((xv, yv, yv_l))
+    xm = jnp.sum(xv, axis=0) / n
+    ym = jnp.sum(yv, axis=0) / n
     if is_compact(pspec) and proj.table is not None:
-        # already batch-mean: compact_co_stats divides inside the partial
-        co_c = _co_allreduce_compact(xf, y_l, proj, pspec, axis, n_shards)
+        co_c = _co_allreduce_compact(xv, yv_l, proj, pspec, axis, n_shards,
+                                     n_valid=n)
         return apply_compact_stats(proj, pspec, xm, ym, co_c)
-    co = _co_allreduce_dense(xf, y_l, pspec.post.N, axis, n_shards) / b
+    co = _co_allreduce_dense(xv, yv_l, pspec.post.N, axis, n_shards) / n
     return apply_dense_stats(proj, pspec, xm, ym, co)
 
 
 def _learn_replicated(proj: Projection, pspec: ProjSpec, xf: jax.Array,
-                      yf: jax.Array) -> Projection:
+                      yf: jax.Array, valid=None) -> Projection:
     """Tiny projections (the single-HC readout) learn replicated: every
     device runs the identical full gemm — trivially bit-exact."""
-    from ..core.bcpnn_layer import _learn_jnp
+    from ..core.bcpnn_layer import _learn_jnp, learn_masked
+    if valid is not None:
+        return learn_masked(proj, pspec, xf, yf, valid)
     return _learn_jnp(proj, pspec, xf, yf)
+
+
+def _train_projection_body(state: DeepState, spec: NetworkSpec, layer: int,
+                           h: jax.Array, axis: str, n_shards: int,
+                           valid=None) -> DeepState:
+    """The column-sharded equivalent of
+    ``core.network.train_projection_step`` on the layer's DIRECT input
+    rates ``h`` (full batch, replicated) — shared by the per-batch step
+    factory (which derives ``h`` from row-sharded input via the frozen
+    column forwards) and the scan-over-batches epoch factories, so both
+    compile the identical barrier-pinned arithmetic."""
+    pspec = spec.projs[layer]
+    proj = state.projs[layer]
+    key, sub = jax.random.split(state.key)
+    s_l = _support_cols(proj, pspec, h, axis, n_shards)
+    t = proj.traces.t.astype(jnp.float32)
+    amp = pspec.support_noise * jnp.maximum(
+        0.0, 1.0 - t / max(1, pspec.noise_steps))
+    # Mirror _noisy_rates' pins: one materialized noise buffer, pinned
+    # scaled product — the column slice then adds the same bits.
+    noise = jax.lax.optimization_barrier(jax.random.normal(
+        sub, (h.shape[0], pspec.post.N), s_l.dtype))
+    nj_l = pspec.post.N // n_shards
+    noise_l = jax.lax.dynamic_slice_in_dim(
+        noise, _axis_offset(axis, nj_l), nj_l, 1)
+    y_l = _softmax_cols(
+        s_l + jax.lax.optimization_barrier(amp * noise_l), pspec,
+        n_shards)
+    yf = _gather_cols(y_l, axis)
+    proj = _learn_sharded(proj, pspec, h, yf, y_l, axis, n_shards,
+                          valid=valid)
+    if pspec.struct_every > 0:
+        from ..core.bcpnn_layer import rewire
+        proj = jax.lax.cond(
+            proj.traces.t % pspec.struct_every == 0,
+            lambda p: rewire(p, pspec), lambda p: p, proj)
+    projs = state.projs[:layer] + (proj,) + state.projs[layer + 1:]
+    return DeepState(projs=projs, readout=state.readout,
+                     step=state.step + 1, key=key)
+
+
+def _supervised_body(state: DeepState, spec: NetworkSpec, xf: jax.Array,
+                     labels: jax.Array, axis: str, n_shards: int,
+                     valid=None) -> DeepState:
+    """Column-sharded frozen stack forward + replicated readout learn on
+    full-batch inputs — shared by the supervised step and epoch."""
+    h = xf
+    for l in range(spec.depth):
+        h = _forward_cols(state.projs[l], spec.projs[l], h, axis, n_shards)
+    y = jax.nn.one_hot(labels, spec.n_classes, dtype=h.dtype)
+    ro = _learn_replicated(state.readout, spec.readout, h, y, valid=valid)
+    return DeepState(projs=state.projs, readout=ro,
+                     step=state.step + 1, key=state.key)
 
 
 def make_data_parallel_unsupervised_step(spec: NetworkSpec, mesh: Mesh,
@@ -183,33 +260,7 @@ def make_data_parallel_unsupervised_step(spec: NetworkSpec, mesh: Mesh,
         for l in range(layer):
             h = _forward_cols(state.projs[l], spec.projs[l], h, axis,
                               n_shards)
-        pspec = spec.projs[layer]
-        proj = state.projs[layer]
-        key, sub = jax.random.split(state.key)
-        s_l = _support_cols(proj, pspec, h, axis, n_shards)
-        t = proj.traces.t.astype(jnp.float32)
-        amp = pspec.support_noise * jnp.maximum(
-            0.0, 1.0 - t / max(1, pspec.noise_steps))
-        # Mirror _noisy_rates' pins: one materialized noise buffer, pinned
-        # scaled product — the column slice then adds the same bits.
-        noise = jax.lax.optimization_barrier(jax.random.normal(
-            sub, (h.shape[0], pspec.post.N), s_l.dtype))
-        nj_l = pspec.post.N // n_shards
-        noise_l = jax.lax.dynamic_slice_in_dim(
-            noise, _axis_offset(axis, nj_l), nj_l, 1)
-        y_l = _softmax_cols(
-            s_l + jax.lax.optimization_barrier(amp * noise_l), pspec,
-            n_shards)
-        yf = _gather_cols(y_l, axis)
-        proj = _learn_sharded(proj, pspec, h, yf, y_l, axis, n_shards)
-        if pspec.struct_every > 0:
-            from ..core.bcpnn_layer import rewire
-            proj = jax.lax.cond(
-                proj.traces.t % pspec.struct_every == 0,
-                lambda p: rewire(p, pspec), lambda p: p, proj)
-        projs = state.projs[:layer] + (proj,) + state.projs[layer + 1:]
-        return DeepState(projs=projs, readout=state.readout,
-                         step=state.step + 1, key=key)
+        return _train_projection_body(state, spec, layer, h, axis, n_shards)
 
     return jax.jit(shard_map(
         step, mesh=mesh, in_specs=(P(), P(axis)), out_specs=P(),
@@ -229,15 +280,100 @@ def make_data_parallel_supervised_step(spec: NetworkSpec, mesh: Mesh,
              labels_l: jax.Array) -> DeepState:
         xf = jax.lax.all_gather(x_l, axis, tiled=True)
         labels = jax.lax.all_gather(labels_l, axis, tiled=True)
-        h = xf
-        for l in range(spec.depth):
-            h = _forward_cols(state.projs[l], spec.projs[l], h, axis,
-                              n_shards)
-        y = jax.nn.one_hot(labels, spec.n_classes, dtype=h.dtype)
-        ro = _learn_replicated(state.readout, spec.readout, h, y)
-        return DeepState(projs=state.projs, readout=ro,
-                         step=state.step + 1, key=state.key)
+        return _supervised_body(state, spec, xf, labels, axis, n_shards)
 
     return jax.jit(shard_map(
         step, mesh=mesh, in_specs=(P(), P(axis), P(axis)), out_specs=P(),
+        check_rep=False))
+
+
+# ------------------------------------------- scan-over-batches epochs ----
+
+def make_data_parallel_projection_epoch(spec: NetworkSpec, mesh: Mesh,
+                                        layer: int = 0, axis: str = "data",
+                                        masked: bool = False):
+    """Build the jitted shard_map equivalent of
+    ``core.trainer._train_projection_epoch``: one ``lax.scan`` over
+    batch-major PRECOMPUTED layer-input rates ``hs`` (nb, B, N_layer),
+    sharded over batch rows on ``axis`` — a whole greedy-phase epoch is
+    one device program, like the single-device trainer.
+
+    With ``masked=True`` the epoch takes an extra ``valid`` (nb, B) 0/1
+    operand (replicated — every device needs the full-batch mask because
+    stats contract the full gathered batch) and runs the real-row-count
+    masked learn on every batch; the trainer passes it only when the
+    data actually has a padded tail.  Per-step arithmetic is the same
+    barrier-pinned body as ``make_data_parallel_unsupervised_step``, so
+    the epoch is bit-for-bit equal to the single-device epoch program.
+    """
+    n_shards = mesh.shape[axis]
+    _check_geometry(spec, layer, n_shards)
+
+    if masked:
+        def epoch(state: DeepState, hs_l: jax.Array,
+                  valid: jax.Array) -> DeepState:
+            def body(st, hv):
+                h_l, v = hv
+                hf = jax.lax.all_gather(h_l, axis, tiled=True)
+                return _train_projection_body(
+                    st, spec, layer, hf, axis, n_shards, valid=v), None
+            state, _ = jax.lax.scan(body, state, (hs_l, valid))
+            return state
+
+        in_specs = (P(), P(None, axis), P())
+    else:
+        def epoch(state: DeepState, hs_l: jax.Array) -> DeepState:
+            def body(st, h_l):
+                hf = jax.lax.all_gather(h_l, axis, tiled=True)
+                return _train_projection_body(
+                    st, spec, layer, hf, axis, n_shards), None
+            state, _ = jax.lax.scan(body, state, hs_l)
+            return state
+
+        in_specs = (P(), P(None, axis))
+
+    return jax.jit(shard_map(
+        epoch, mesh=mesh, in_specs=in_specs, out_specs=P(),
+        check_rep=False))
+
+
+def make_data_parallel_supervised_epoch(spec: NetworkSpec, mesh: Mesh,
+                                        axis: str = "data",
+                                        masked: bool = False):
+    """Build the jitted shard_map equivalent of
+    ``core.trainer._supervised_epoch``: one scan over batch-major
+    ``(xs, ys)`` (row-sharded on ``axis``), plus a replicated ``valid``
+    operand when ``masked``."""
+    n_shards = mesh.shape[axis]
+    _check_geometry(spec, spec.depth - 1, n_shards)
+
+    def _step(st, x_l, labels_l, v):
+        xf = jax.lax.all_gather(x_l, axis, tiled=True)
+        labels = jax.lax.all_gather(labels_l, axis, tiled=True)
+        return _supervised_body(st, spec, xf, labels, axis, n_shards,
+                                valid=v)
+
+    if masked:
+        def epoch(state: DeepState, xs_l: jax.Array, ys_l: jax.Array,
+                  valid: jax.Array) -> DeepState:
+            def body(st, xyv):
+                x_l, labels_l, v = xyv
+                return _step(st, x_l, labels_l, v), None
+            state, _ = jax.lax.scan(body, state, (xs_l, ys_l, valid))
+            return state
+
+        in_specs = (P(), P(None, axis), P(None, axis), P())
+    else:
+        def epoch(state: DeepState, xs_l: jax.Array,
+                  ys_l: jax.Array) -> DeepState:
+            def body(st, xy):
+                x_l, labels_l = xy
+                return _step(st, x_l, labels_l, None), None
+            state, _ = jax.lax.scan(body, state, (xs_l, ys_l))
+            return state
+
+        in_specs = (P(), P(None, axis), P(None, axis))
+
+    return jax.jit(shard_map(
+        epoch, mesh=mesh, in_specs=in_specs, out_specs=P(),
         check_rep=False))

@@ -307,6 +307,11 @@ def test_dp_seams_contract_holds():
     assert check_dp_seams() == []
 
 
+def test_masked_seams_contract_holds():
+    from repro.analysis.contracts import check_masked_seams
+    assert check_masked_seams() == []
+
+
 def test_recompile_sentinel_contract_holds():
     from repro.analysis.contracts import check_recompile_sentinel
     assert check_recompile_sentinel() == []
